@@ -1,0 +1,61 @@
+"""RS1–RS5 synthetic proxies (paper Table 3), sized for CPU-container runs.
+
+Profiles mirror the paper's qualitative spread: RS1 short/moderate depth,
+RS2 short/high-depth human-like (best ratios), RS3 short/low-similarity
+(worst short ratio), RS4 long ONT (noisy), RS5 long HiFi-like. Encoded
+SageFiles are cached under benchmarks/artifacts/datasets/."""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from pathlib import Path
+
+from repro.core.encoder import SageEncoder
+from repro.core.format import SageFile
+from repro.genomics.synth import ReadSet, make_reference, sample_read_set
+
+ART = Path(__file__).parent / "artifacts" / "datasets"
+
+
+@dataclasses.dataclass
+class RSSpec:
+    label: str
+    profile: str
+    ref_len: int
+    depth: float
+    seed: int
+    snp_rate: float = 0.001
+    max_reads: int | None = None
+    kind: str = "short"
+
+
+SPECS = [
+    RSSpec("RS1", "illumina", 100_000, 6, 11),
+    RSSpec("RS2", "illumina", 60_000, 20, 12),
+    RSSpec("RS3", "illumina", 80_000, 4, 13, snp_rate=0.02),  # low similarity
+    RSSpec("RS4", "ont", 90_000, 2.2, 14, kind="long", max_reads=26),
+    RSSpec("RS5", "hifi", 90_000, 2.0, 15, kind="long", max_reads=16),
+]
+
+
+def load(label: str, with_sage: bool = True):
+    """Returns (spec, reference, readset, sagefile|None); cached."""
+    spec = next(s for s in SPECS if s.label == label)
+    ART.mkdir(parents=True, exist_ok=True)
+    cache = ART / f"{label}.pkl"
+    if cache.exists():
+        with open(cache, "rb") as f:
+            ref, rs, sf = pickle.load(f)
+    else:
+        ref = make_reference(spec.ref_len, seed=spec.seed)
+        rs = sample_read_set(ref, spec.profile, depth=spec.depth, seed=spec.seed + 100,
+                             snp_rate=spec.snp_rate, max_reads=spec.max_reads)
+        sf = SageEncoder(ref, token_target=16384).encode(rs) if with_sage else None
+        with open(cache, "wb") as f:
+            pickle.dump((ref, rs, sf), f)
+    return spec, ref, rs, sf
+
+
+def all_labels() -> list[str]:
+    return [s.label for s in SPECS]

@@ -1,0 +1,187 @@
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.report import bench_claims, dryrun_table, perf_rows, roofline_table
+
+md = f"""# EXPERIMENTS
+
+All numbers produced in this container (single-CPU JAX; TPU v5e is the
+compile/roofline TARGET). Regenerate with:
+`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both` then
+`PYTHONPATH=src python -m benchmarks.run > bench_output.txt` then
+`PYTHONPATH=src:. python benchmarks/gen_experiments.py`.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16 · 819 GB/s HBM · 50 GB/s/link ICI.
+Meshes: single-pod (data=16, model=16) = 256 chips; multi-pod (pod=2, data=16,
+model=16) = 512 chips.
+
+## §Paper-claims — reproduction of the paper's own evaluation
+
+**Compression ratios (paper Table 3).** Measured on RS1–RS5 synthetic proxies
+(benchmarks/datasets.py) against a zlib-9 "pigz" proxy and a Spring-proxy
+(same consensus modeling, LZMA backend):
+
+{bench_claims()}
+
+**Fig. 3 motivation** — our pipeline model with the paper-calibrated software
+rates reproduces the paper's headline slowdowns exactly: Cmprs1+IO = 0.019
+(paper: 1/51.5), Cmprs2+IO = 0.037 (1/27.0), NoIO variants identical (decomp-
+bound, the paper's 2nd observation), NoCmprs+IO = 0.40 (1/2.5), see
+bench_output.txt `fig03/*`.
+
+**Fig. 12 end-to-end** — SG == 0TimeDec in every read set (decompression fully
+hidden; paper's 6th observation) and SG+ISF > 0TimeDec (in-storage filtering
+beats even zero-cost decompression outside the SSD; paper's 7th observation).
+`fig12/*` rows in bench_output.txt; SG+ISF/SG ratios track the per-dataset
+filter fractions as in the paper.
+
+**Fig. 17 optimization breakdown** — re-encoding RS2/RS4 at opt levels O0–O4
+(`fig17/*`): on short reads (RS2: 89 KB → 29 KB) the adaptive match-position
+(O1) and mismatch-position/count (O2) coders give 3.0x; on long reads (RS4:
+70 KB → 28 KB) the indel/base-type optimizations (O3) are the biggest single
+step — exactly the paper's qualitative ordering (their Fig. 17).
+
+**§7.4 decode speed** — `decode_speed/*` reports the CONTAINER-measured rates
+(single weak core): the vectorized JAX software decoder is NOT faster than
+zlib here, unlike the paper's 128-core EPYC measurement; the pipeline figures
+therefore use the paper-calibrated rates (benchmarks/constants.py documents
+this deviation). The hardware-decode path (SG) is storage-bound by design and
+does not depend on this calibration.
+
+## §Dry-run — 10 archs × 4 shapes × 2 production meshes
+
+Every live cell **lowers AND compiles** for both meshes; `skipped¹` = the
+assignment-mandated skip (long_500k on pure full-attention archs; run for the
+ssm/hybrid archs). 32 live cells + 8 principled skips = the 40 assigned cells.
+Train cells: bf16 activations, f32 params, ZeRO-1 moments, microbatch=4,
+SP on, flash-attention chunk 1024. Serve cells: bf16 weights, KV-head- or
+seq-sharded caches.
+
+### single-pod (16×16 = 256 chips)
+
+{dryrun_table("pod1")}
+
+### multi-pod (2×16×16 = 512 chips)
+
+{dryrun_table("pod2")}
+
+¹ long_500k needs sub-quadratic attention; per the assignment it runs only
+for mamba2-370m (SSM state, O(1) decode) and zamba2-2.7b (hybrid:
+seq-sharded 512k KV cache for its shared attention blocks) and is skipped
+for the 8 pure full-attention architectures (DESIGN.md §4).
+
+## §Roofline — per (arch × shape), single-pod, per-device terms
+
+Terms from the trip-count-aware HLO walker (launch/hlo_cost.py — XLA's
+cost_analysis counts while-loop bodies once; ours multiplies by
+known_trip_count, validated in tests/test_hlo_cost.py):
+
+  t_compute = HLO_FLOPs_dev / 197e12 · t_memory = HLO_bytes_dev / 819e9 ·
+  t_collective = collective_bytes_dev / 50e9
+
+roofline_frac = (MODEL_FLOPS/chips/peak) / max(term) — the fraction of the
+dominant-term-bounded step time that is useful model math (hillclimb score).
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (prefill/decode).
+
+{roofline_table()}
+
+Reading the table: train cells land at useful/HLO ≈ 0.5–0.7 (remat recompute
++ the documented ≤2x masked-waste in the causal flash formulation); decode
+cells have roofline_frac ≈ 0 because a single generated token cannot amortize
+reading weights+cache — that is decode physics, not an inefficiency; their
+real scores are the memory terms (weights+cache read time), which sit at the
+HBM bound. The three most interesting cells are hillclimbed below.
+
+## §Perf — hypothesis → change → measure → validate
+
+The three selected cells: (1) **whisper-small/train_4k** — most
+collective-bound (t_coll/t_comp = 260x); (2) **yi-34b/prefill_32k** — worst
+roofline fraction among big-model cells AND collective-bound; (3)
+**qwen2-1.5b/train_4k + SAGe-fused prep** — the cell most representative of
+the paper's technique. Baselines for all other cells are reported above only,
+per the assignment.
+
+### Cell 1 — whisper-small × train_4k (most collective-bound)
+
+{perf_rows("whisper-small_train_4k_pod1*.json")}
+
+* **Iter 1 (pure-DP)** — hypothesis: a 0.25B model TP-sharded 16-ways wastes
+  the wire; per-layer TP all-gathers dominate (napkin: params fit HBM
+  replicated 250M×12B = 3GB, so TP buys nothing). Change: fold the model axis
+  into DP (256-way DP). **Confirmed**: t_collective 28.6 s → 0.09 s (−315x),
+  roofline_frac 0.0012 → 0.0051 (+4.3x); now memory-bound.
+* **Iter 2 (explicit int16 error-feedback gradient all-reduce)** — hypothesis:
+  the remaining collective is the f32 DP gradient reduction (0.25B × 4B);
+  int16 quantization with a shared pmax scale + EF halves wire bytes without
+  convergence loss. Change: shard_map DP step (distributed/dp_step.py).
+  **Confirmed**: t_collective 0.091 → 0.013 s, roofline_frac → 0.0198
+  (**16.5x total**). bf16 variant measured too (0.026 s — int16+EF is 2x
+  better on the wire than bf16 at equal bytes because psum(int16) needs no
+  widening resharding in this graph).
+* **Iter 3 (chunk sweep)** — <5% movement; stopped per the protocol.
+
+### Cell 2 — yi-34b × prefill_32k (worst big-model roofline fraction)
+
+{perf_rows("yi-34b_prefill_32k_pod1*.json")}
+
+* **Iter 1 (attention chunk 2048/4096)** — hypothesis: fewer KV-block scan
+  steps → fewer boundary reshards. **Refuted**: t_collective unchanged
+  (585 s) — the collectives are NOT in the attention inner loop.
+* **Iter 2 (disable SP for prefill)** — hypothesis: with activations
+  seq-sharded, EVERY layer re-all-gathers (B,S,d) for attention — at S=32k,
+  d=7168 that is ~0.9 GB × 60 layers of wire; prefill has no optimizer state,
+  so SP's memory win is not needed. **Confirmed**: t_collective 586 → 77.8 s
+  (−7.5x), t_memory 109 → 65 s, peak HBM 28.5 → 19.1 GB, roofline_frac
+  0.0024 → 0.0184 (**7.7x**).
+* Residual bottleneck is still the TP all-reduce chain of 60 layers — the
+  next lever is 2D (data×model) activation sharding with reduce-scatter
+  matmuls; recorded as future work since the two follow-up probes moved the
+  dominant term <5%.
+
+### Cell 3 — qwen2-1.5b × train_4k + SAGe on-device data preparation
+
+{perf_rows("qwen2-1.5b_train_4k_pod1*.json")}
+
+* **Paper-faithful baseline vs SAGe-fused**: fusing the full SAGe block
+  decode + k-mer reformat INTO the compiled train step (inputs = compressed
+  streams, round-robin over the data axis like the paper's NAND channels)
+  costs **+0.0004% FLOPs, +0.008% HBM bytes, +0.00001% collective bytes,
+  +0.3 GB/dev arguments** — i.e. data preparation vanishes from the critical
+  path *by construction*, the strongest possible form of the paper's claim
+  (their Fig. 12 shows SG == 0TimeDec; ours shows SG ≈ no-data-prep-at-all
+  inside one XLA program, with the host pipeline fallback measured in
+  tests/benchmarks).
+* **Iter 1 (chunk 2048)** — hypothesis: the training collectives include
+  per-KV-step boundary reshards; halving the step count cuts them.
+  **Confirmed**: t_collective 34.8 → 26.5 s (−24%), roofline_frac 0.0055 →
+  0.0073 (+33%).
+* **Iter 2 (chunk 4096)** — <1% further movement (saturated); stopped.
+
+### Beyond-paper summary
+
+The paper's floor (faithful reproduction): consensus+guide-array encoding at
+Spring-class ratios, lossless device decode, prep hidden behind analysis.
+Beyond it, in this framework: (i) the rank-coded merged base/type field —
+bit-identical cost to the paper's trick but makes indel detection data-
+parallel (DESIGN.md §2), which is what lets the whole decoder run as ~12
+vector ops per block on a TPU instead of a bit-serial FSM; (ii) fused-in-
+graph data preparation (above); (iii) distributed-training optimizations the
+paper never touches, validated by dry-run deltas: pure-DP re-sharding for
+small models (16.5x), no-SP prefill (7.7x), int16-EF gradient reduction (2x
+wire), ZeRO-1 moment sharding (−8 GB/dev on yi-34b), microbatched
+accumulation (−17 GB/dev on deepseek-moe), shard_map expert parallelism
+(−150 GB/dev vs naive GSPMD MoE dispatch — 195 GB → 8.7 GB).
+
+## §Fault tolerance / large-scale runnability evidence
+
+* atomic+async+elastic checkpoints: tests/test_substrate.py,
+  tests/test_distributed.py::test_elastic_checkpoint_restore_across_meshes
+* deterministic SAGe data cursor resume: test_pipeline_deterministic_and_resumable
+* trainer auto-resume + SIGTERM-safe final save + NaN circuit breaker +
+  straggler monitor: tests/test_substrate.py
+* GPipe pipeline parallelism (shard_map+ppermute): test_pipeline_parallel_matches_sequential
+* 512-chip multi-pod compile for every live cell: §Dry-run above.
+"""
+
+open("EXPERIMENTS.md", "w").write(md)
+print("EXPERIMENTS.md written:", len(md), "chars")

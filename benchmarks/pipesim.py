@@ -1,0 +1,67 @@
+"""Analytic end-to-end pipeline model (paper §3/§6 methodology).
+
+I/O, decompression/reformat, and read mapping run pipelined in batches, so
+steady-state throughput = min over stage throughputs (the paper: "the
+end-to-end throughput is determined based on the slowest stage"). All
+stages are expressed in UNCOMPRESSED bases/s.
+
+Stage menu per configuration:
+  io        compressed bytes off storage x ratio (or internal channels for
+            in-SSD preparation)
+  decomp    host software / in-SSD hardware decode
+  xfer      decompressed 2-bit data crossing the SSD<->host interface (only
+            when preparation happens inside the SSD / data is uncompressed)
+  mapper    the genome-analysis accelerator; an in-storage filter (ISF,
+            GenStore-style) cuts its load to (1 - filter_frac)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from benchmarks.constants import (
+    BASES_PER_BYTE_2BIT,
+    CHANNEL_BW,
+    MAPPER_BASES_S,
+    PCIE_SSD_BW,
+)
+
+
+@dataclasses.dataclass
+class Scenario:
+    ratio: float  # compression ratio vs 1-byte-per-base
+    decomp_bases_s: Optional[float]  # None => no decompression needed/HW keeps up
+    prep_inside_ssd: bool = False  # decode before or after the interface
+    stored_uncompressed: bool = False
+    ext_bw: float = PCIE_SSD_BW  # SSD<->host interface bandwidth
+    int_bw: float = CHANNEL_BW  # NAND channel aggregate
+    mapper_bases_s: float = MAPPER_BASES_S
+    filter_frac: float = 0.0  # ISF-pruned fraction (requires prep_inside_ssd)
+    no_io: bool = False  # idealized zero-I/O variants (§3)
+
+
+def throughput(s: Scenario) -> float:
+    """Steady-state pipeline throughput in bases/s."""
+    stages: list[float] = []
+    # uncompressed data is FASTQ on disk (~2 bytes/base: sequence + quality)
+    ratio = (1.0 / 2.0) if s.stored_uncompressed else s.ratio
+    # storage read (compressed bytes -> bases)
+    if not s.no_io:
+        src_bw = s.int_bw if s.prep_inside_ssd else s.ext_bw
+        stages.append(src_bw * ratio)
+    # decompression / reformat
+    if s.decomp_bases_s is not None:
+        stages.append(s.decomp_bases_s)
+    # interface crossing with decompressed 2-bit data
+    if s.prep_inside_ssd and not s.no_io:
+        survivors = max(1.0 - s.filter_frac, 1e-6)
+        stages.append(s.ext_bw * BASES_PER_BYTE_2BIT / survivors)
+    # analysis accelerator
+    survivors = max(1.0 - s.filter_frac, 1e-6)
+    stages.append(s.mapper_bases_s / survivors)
+    return min(stages)
+
+
+def speedup(s: Scenario, baseline: Scenario) -> float:
+    return throughput(s) / throughput(baseline)

@@ -1,0 +1,57 @@
+"""Roofline table generator: reads launch/dryrun artifacts and emits the
+EXPERIMENTS.md §Roofline table (+ CSV rows for run.py)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).parent / "artifacts" / "dryrun"
+
+
+def records(pod: str = "pod1", tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(ART.glob(f"*_{pod}{tag}.json")):
+        if tag == "" and f.stem.count("_") > 2 and not f.stem.endswith(pod):
+            continue
+        r = json.loads(f.read_text())
+        out.append(r)
+    return out
+
+
+def rows() -> list[tuple]:
+    out = []
+    for r in records():
+        cell = f"{r['arch']}/{r['shape']}"
+        if r.get("status") == "skipped":
+            out.append((f"roofline/{cell}/skipped", 1))
+            continue
+        if r.get("status") != "ok":
+            out.append((f"roofline/{cell}/FAILED", 0))
+            continue
+        out.append((f"roofline/{cell}/roofline_frac", round(r["roofline_frac"], 4)))
+    return out
+
+
+def markdown_table(pod: str = "pod1", tag: str = "") -> str:
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | bottleneck | HBM GB | useful/HLO | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records(pod, tag):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped (full attention @500k) | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAILED | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3g} | {r['t_memory']:.3g} | "
+            f"{r['t_collective']:.3g} | {r['bottleneck']} | {r['peak_hbm_gb']:.1f} | "
+            f"{r['useful_flops_frac']:.2f} | {r['roofline_frac']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

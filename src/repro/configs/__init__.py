@@ -1,0 +1,2 @@
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+from repro.configs.registry import ARCHS, cells, get_arch, get_shape

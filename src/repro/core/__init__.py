@@ -1,0 +1,16 @@
+"""SAGe core: the paper's contribution — compression algorithm, container
+format, and data-parallel decoders — as a composable JAX module."""
+
+from repro.core.api import (
+    OutputFormat,
+    kmer_pack,
+    kmer_special_ids,
+    kmer_vocab_size,
+    one_hot_bases,
+    pick_k,
+    sage_read,
+    sage_write,
+)
+from repro.core.decode_jax import PAD_BASE, DeviceBlocks, decode_file_jax, prepare_device_blocks
+from repro.core.encoder import SageEncoder
+from repro.core.format import BlockCaps, SageFile, SageMeta

@@ -1,0 +1,101 @@
+"""SAGe interface commands (§5.3 analogue).
+
+The paper exposes three NVMe commands; our TPU framework exposes them as an
+API over the container + device decoders:
+
+  SAGe_Write -> :func:`sage_write`   compress a read set (host)
+  SAGe_Read  -> :func:`sage_read`    decode to the accelerator's desired
+                format: 2-bit tokens, one-hot, or k-mer LM tokens
+  SAGe_ISP   -> the ``consumer`` argument: decoded blocks are handed either
+                to an in-framework analysis stage (read mapper / filter) or
+                to the training/serving data pipeline
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode_jax import PAD_BASE, DeviceBlocks, decode_file_jax, prepare_device_blocks
+from repro.core.encoder import SageEncoder
+from repro.core.format import SageFile
+from repro.genomics.synth import ReadSet
+
+
+class OutputFormat(enum.Enum):
+    TOKENS_2BIT = "2bit"  # int8 base codes 0..3 (PAD_BASE padding)
+    ONE_HOT = "onehot"  # (.., 4) bfloat16 one-hot (paper cites [106])
+    KMER = "kmer"  # packed k-mer LM token ids (maps onto arch vocabs)
+
+
+# -- k-mer token space ------------------------------------------------------
+def kmer_vocab_size(k: int) -> int:
+    return 4**k + 3  # + PAD, BOS, NBLK
+
+
+def kmer_special_ids(k: int) -> dict[str, int]:
+    return {"pad": 4**k, "bos": 4**k + 1, "nblk": 4**k + 2}
+
+
+def pick_k(vocab_size: int, max_k: int = 8) -> int:
+    """Largest k with 4^k + specials <= vocab (how arch vocabs map to DNA)."""
+    k = 1
+    while k < max_k and kmer_vocab_size(k + 1) <= vocab_size:
+        k += 1
+    return k
+
+
+def kmer_pack(tokens: jax.Array, k: int) -> jax.Array:
+    """Pack base tokens (.., C) into k-mer ids (.., C//k).
+
+    Any group containing PAD maps to the pad id; containing N (=4 via
+    escape reads) maps to the N-block id. Pure-jnp reference for the
+    reformat kernel."""
+    C = tokens.shape[-1]
+    g = tokens[..., : (C // k) * k].reshape(*tokens.shape[:-1], C // k, k).astype(jnp.int32)
+    weights = (4 ** jnp.arange(k, dtype=jnp.int32))[::-1]
+    ids = jnp.sum(jnp.where(g > 3, 0, g) * weights, axis=-1)
+    sp = kmer_special_ids(k)
+    has_pad = jnp.any(g == PAD_BASE, axis=-1)
+    has_n = jnp.any(g == 4, axis=-1) & ~has_pad  # PAD_BASE == 4 == N code
+    ids = jnp.where(has_pad, sp["pad"], ids)
+    ids = jnp.where(has_n, sp["nblk"], ids)
+    return ids
+
+
+def one_hot_bases(tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """(.., C) -> (.., C, 4); PAD rows are all-zero."""
+    t = tokens.astype(jnp.int32)
+    return (t[..., None] == jnp.arange(4, dtype=jnp.int32)).astype(dtype)
+
+
+# -- commands ---------------------------------------------------------------
+def sage_write(
+    rs: ReadSet,
+    consensus: np.ndarray,
+    token_target: int = 65536,
+    **enc_kwargs,
+) -> SageFile:
+    """Compress a read set against a consensus (SAGe_Write)."""
+    enc = SageEncoder(consensus, token_target=token_target, **enc_kwargs)
+    return enc.encode(rs)
+
+
+def sage_read(
+    sf_or_db: SageFile | DeviceBlocks,
+    fmt: OutputFormat = OutputFormat.TOKENS_2BIT,
+    kmer_k: Optional[int] = None,
+) -> dict[str, jax.Array]:
+    """Decode all blocks to the requested format (SAGe_Read)."""
+    db = sf_or_db if isinstance(sf_or_db, DeviceBlocks) else prepare_device_blocks(sf_or_db)
+    out = decode_file_jax(db)
+    if fmt == OutputFormat.ONE_HOT:
+        out["onehot"] = one_hot_bases(out["tokens"])
+    elif fmt == OutputFormat.KMER:
+        assert kmer_k is not None, "KMER format needs kmer_k"
+        out["kmer"] = kmer_pack(out["tokens"], kmer_k)
+    return out

@@ -1,0 +1,366 @@
+"""Data-parallel SAGe decoder (pure JAX).
+
+This is the TPU-native adaptation of the paper's Scan Unit / Read
+Construction Unit (§5.2): every sequential recurrence in the hardware FSM is
+an associative scan, so one block decodes with ~a dozen vectorized
+cumsum/gather/scatter passes over fixed-capacity arrays:
+
+  unary guide codes   -> rank zero-bits (cumsum) + scatter positions
+  var-width fields    -> prefix-sum widths + 64-bit-window gathers
+  delta positions     -> segmented cumsum
+  indel bookkeeping   -> explicit (mbb==3) detection + rank cumsums
+  read reconstruction -> scatter subs/ins/del onto the token axis + gathers
+                         from the 2-bit consensus window
+
+Blocks are decoded independently (vmap / Pallas grid) — the analogue of the
+paper's per-NAND-channel parallel units. All device math is int32/uint32 and
+block-local (positions relative to the block's consensus window), so genomes
+larger than 2^31 bases pose no problem.
+
+``decode_block_arrays`` is the single source of truth for the math; the
+Pallas kernel (repro/kernels/sage_decode.py) calls the same function on VMEM
+refs, and tests check both against the sequential numpy oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.format import D, STREAMS, SageFile
+
+PAD_BASE = 4  # output padding token
+
+
+# --------------------------------------------------------------------------
+# bit-level helpers (uint32 streams)
+# --------------------------------------------------------------------------
+
+def extract_fields(words: jax.Array, starts: jax.Array, widths: jax.Array) -> jax.Array:
+    """Extract variable-width little-endian fields (width<=32) from a packed
+    uint32 stream. Fully vectorized; the 64-bit window is formed from two
+    adjacent words (the paper's double-register §5.2.1)."""
+    words = words.astype(jnp.uint32)
+    starts = starts.astype(jnp.int32)
+    widths = widths.astype(jnp.int32)
+    idx = jnp.clip(starts >> 5, 0, words.shape[0] - 2)
+    sh = (starts & 31).astype(jnp.uint32)
+    lo = words[idx] >> sh
+    hi = jnp.where(sh == 0, jnp.uint32(0), words[idx + 1] << (jnp.uint32(32) - jnp.maximum(sh, 1)))
+    val = lo | hi
+    mask = jnp.where(
+        widths <= 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> jnp.clip(32 - widths, 0, 31).astype(jnp.uint32),
+    )
+    return (val & mask).astype(jnp.int32)
+
+
+def stream_bits(words: jax.Array, nbits_cap: int) -> jax.Array:
+    """Expand a packed stream's first ``nbits_cap`` bits to a 0/1 int32 array."""
+    i = jnp.arange(nbits_cap, dtype=jnp.int32)
+    idx = jnp.clip(i >> 5, 0, words.shape[0] - 1)
+    return ((words.astype(jnp.uint32)[idx] >> (i & 31).astype(jnp.uint32)) & 1).astype(jnp.int32)
+
+
+def decode_adaptive(
+    gwords: jax.Array,
+    awords: jax.Array,
+    n: jax.Array,
+    class_widths: tuple[int, ...],
+    cap: int,
+) -> jax.Array:
+    """Decode ``n`` (<=cap) adaptive-width values: unary guide codes in
+    ``gwords`` select a width class; fields packed in ``awords``."""
+    ncls = len(class_widths)
+    gb = cap * ncls + 1
+    bits = stream_bits(gwords, gb)
+    is_zero = 1 - bits
+    rank = jnp.cumsum(is_zero)  # 1-based at zero positions
+    # position of k-th zero via scatter (garbage ranks land at sentinel cap)
+    tgt = jnp.where(is_zero == 1, jnp.minimum(rank - 1, cap), cap)
+    zpos = jnp.zeros(cap + 1, dtype=jnp.int32).at[tgt].max(
+        jnp.arange(gb, dtype=jnp.int32), mode="drop"
+    )
+    zprev = jnp.concatenate([jnp.full((1,), -1, dtype=jnp.int32), zpos[: cap - 1]])
+    cls = jnp.clip(zpos[:cap] - zprev - 1, 0, ncls - 1)
+    # static where-chain (no captured constant tables — Pallas-compatible)
+    widths = jnp.zeros((cap,), jnp.int32)
+    for i, w in enumerate(class_widths):
+        widths = jnp.where(cls == i, jnp.int32(w), widths)
+    k = jnp.arange(cap, dtype=jnp.int32)
+    widths = jnp.where(k < n, widths, 0)
+    offs = jnp.cumsum(widths) - widths
+    vals = extract_fields(awords, offs, widths)
+    return jnp.where(k < n, vals, 0)
+
+
+def _seg_cumsum(vals: jax.Array, first_idx: jax.Array) -> jax.Array:
+    """Inclusive cumsum of ``vals`` restarted at each segment; ``first_idx``
+    maps element -> index of its segment's first element."""
+    gc = jnp.cumsum(vals)
+    gc_excl = gc - vals
+    return gc - gc_excl[jnp.clip(first_idx, 0, vals.shape[0] - 1)]
+
+
+# --------------------------------------------------------------------------
+# the block decoder
+# --------------------------------------------------------------------------
+
+def decode_block_arrays(
+    blk: dict[str, jax.Array],
+    *,
+    caps,
+    classes: dict[str, tuple[int, ...]],
+    fixed_len: int,
+) -> dict[str, jax.Array]:
+    """Decode one block. ``blk`` holds per-block stream word slices plus the
+    directory row; everything is block-local. Returns the flat token buffer
+    plus per-read metadata."""
+    R, M = caps.segs, max(caps.mism, 1)
+    I, U = max(caps.indel, 1), max(caps.multi, 1)
+    C = caps.tokens
+    row = blk["dir"]
+    n_segs = row[D["n_segs"]]
+    n_mism = row[D["n_mism"]]
+    n_tok = row[D["n_tokens"]]
+    # host prep pre-localizes base_pos (base_pos - cons_start), keeping all
+    # device math int32-safe regardless of genome size
+    base_local = row[D["base_pos"]]
+
+    ar_r = jnp.arange(R, dtype=jnp.int32)
+    ar_m = jnp.arange(M, dtype=jnp.int32)
+    ar_t = jnp.arange(C, dtype=jnp.int32)
+    seg_mask = ar_r < n_segs
+    mism_mask = ar_m < n_mism
+    tok_mask = ar_t < n_tok
+
+    # ---- per-segment streams -------------------------------------------
+    map_vals = decode_adaptive(blk["mapg"], blk["mapa"], n_segs, classes["map"], R)
+    if fixed_len:
+        lens = jnp.where(seg_mask, jnp.int32(fixed_len), 0)
+    else:
+        lens = jnp.where(seg_mask, decode_adaptive(blk["leng"], blk["lena"], n_segs, classes["len"], R), 0)
+    cnts = jnp.where(seg_mask, decode_adaptive(blk["cntg"], blk["cnta"], n_segs, classes["cnt"], R), 0)
+    rfl = extract_fields(blk["rfl"], 3 * ar_r, jnp.full((R,), 3, jnp.int32))
+    rev = (rfl & 1) & seg_mask
+    cont = ((rfl >> 1) & 1) & seg_mask
+    corner = ((rfl >> 2) & 1) & seg_mask
+
+    # ---- segment positions (block-local) --------------------------------
+    is_chain = seg_mask & (cont == 0) & (corner == 0)
+    acc = base_local + jnp.cumsum(jnp.where(is_chain, map_vals, 0))
+    unzig = (map_vals >> 1) ^ -(map_vals & 1)
+    pos = jnp.where(cont == 1, acc + unzig, acc)  # corner pos unused
+
+    # ---- token layout ----------------------------------------------------
+    starts_i = jnp.cumsum(lens) - lens  # (R,) exclusive
+    seg_of_t = jnp.searchsorted(jnp.cumsum(lens), ar_t, side="right").astype(jnp.int32)
+    seg_of_t = jnp.clip(seg_of_t, 0, R - 1)
+    seg_start_t = starts_i[seg_of_t]
+    j = ar_t - seg_start_t  # read-coordinate within segment
+
+    # ---- mismatch -> segment mapping ------------------------------------
+    cnt_ends = jnp.cumsum(cnts)
+    cnt_starts = cnt_ends - cnts
+    seg_of_m = jnp.clip(jnp.searchsorted(cnt_ends, ar_m, side="right").astype(jnp.int32), 0, R - 1)
+    mp_deltas = decode_adaptive(blk["mpg"], blk["mpa"], n_mism, classes["mp"], M)
+    p_m = _seg_cumsum(mp_deltas, cnt_starts[seg_of_m])  # read coords
+    mbb = extract_fields(blk["mbb"], 2 * ar_m, jnp.full((M,), 2, jnp.int32))
+    mbb = jnp.where(mism_mask, mbb, 0)
+
+    # ---- indel decode (explicit rank code: mbb==3) -----------------------
+    is_ind = jnp.where(mism_mask, (mbb == 3).astype(jnp.int32), 0)
+    ind_rank = jnp.cumsum(is_ind) - is_ind  # 0-based rank into idg
+    idg_all = extract_fields(blk["idg"], 2 * jnp.arange(I, dtype=jnp.int32), jnp.full((I,), 2, jnp.int32))
+    idg_m = idg_all[jnp.clip(ind_rank, 0, I - 1)]
+    is_ins = is_ind * (idg_m & 1)
+    is_multi = is_ind * ((idg_m >> 1) & 1)
+    mul_rank = jnp.cumsum(is_multi) - is_multi
+    idl_all = extract_fields(blk["idl"], 8 * jnp.arange(U, dtype=jnp.int32), jnp.full((U,), 8, jnp.int32))
+    ilen_m = jnp.where(is_multi == 1, idl_all[jnp.clip(mul_rank, 0, U - 1)], 1) * is_ind
+    ins_len_m = jnp.where(is_ins == 1, ilen_m, 0)
+    del_len_m = jnp.where((is_ind == 1) & (is_ins == 0), ilen_m, 0)
+    ibs_off_m = jnp.cumsum(ins_len_m) - ins_len_m  # exclusive, in bases
+
+    # ---- consensus cursor per mismatch (for sub rank -> base) -----------
+    shift_m_excl = _seg_cumsum(del_len_m - ins_len_m, cnt_starts[seg_of_m]) - (del_len_m - ins_len_m)
+    cursor_m = pos[seg_of_m] + p_m + shift_m_excl
+    cw = blk["cons"]
+
+    def cons_at(idx: jax.Array) -> jax.Array:
+        idx = jnp.clip(idx, 0, caps.window - 1)
+        return ((cw.astype(jnp.uint32)[idx >> 4] >> (2 * (idx & 15)).astype(jnp.uint32)) & 3).astype(jnp.int32)
+
+    cons_b_m = cons_at(cursor_m)
+    sub_base = mbb + (mbb >= cons_b_m).astype(jnp.int32)  # rank -> base
+
+    # ---- scatter mismatches onto the token axis -------------------------
+    t_m = starts_i[seg_of_m] + p_m
+    t_m_safe = jnp.where(mism_mask, jnp.clip(t_m, 0, C - 1), C)  # C -> dropped
+    is_sub = mism_mask & (mbb < 3)
+    sub_t = jnp.full((C,), -1, jnp.int32).at[jnp.where(is_sub, t_m_safe, C)].set(sub_base, mode="drop")
+    # deletions: shift consensus index for t >= t_m
+    del_at = jnp.zeros((C,), jnp.int32).at[t_m_safe].add(del_len_m, mode="drop")
+    del_shift_t = _seg_cumsum(del_at, seg_start_t)
+    # insertions: mark coverage [t_m, t_m + L)
+    is_ins_m = mism_mask & (is_ins == 1)
+    ins_start_mark = jnp.full((C,), -1, jnp.int32).at[jnp.where(is_ins_m, t_m_safe, C)].max(t_m, mode="drop")
+    last_ins_start = jax.lax.cummax(ins_start_mark)
+    ins_len_t0 = jnp.zeros((C,), jnp.int32).at[jnp.where(is_ins_m, t_m_safe, C)].max(ins_len_m, mode="drop")
+    ins_off_t0 = jnp.zeros((C,), jnp.int32).at[jnp.where(is_ins_m, t_m_safe, C)].max(ibs_off_m, mode="drop")
+    lis = jnp.clip(last_ins_start, 0, C - 1)
+    inside_ins = (last_ins_start >= 0) & (ar_t - last_ins_start < ins_len_t0[lis]) & tok_mask
+    ibs_idx_t = ins_off_t0[lis] + (ar_t - last_ins_start)
+    ibs_val_t = extract_fields(blk["ibs"], 2 * jnp.clip(ibs_idx_t, 0, caps.insb), jnp.full((C,), 2, jnp.int32))
+
+    # ---- consensus-derived tokens ----------------------------------------
+    consumes = jnp.where(tok_mask & ~inside_ins, 1, 0)
+    cc_t = _seg_cumsum(consumes, seg_start_t) - consumes  # exclusive
+    cons_idx_t = pos[seg_of_t] + cc_t + del_shift_t
+    cons_tok = cons_at(cons_idx_t)
+
+    # ---- escape (corner) segments ----------------------------------------
+    esc_lens = jnp.where(corner == 1, lens, 0)
+    esc_start_seg = jnp.cumsum(esc_lens) - esc_lens
+    esc_idx_t = esc_start_seg[seg_of_t] + j
+    esc_val_t = extract_fields(blk["esc"], 3 * jnp.clip(esc_idx_t, 0, caps.escb), jnp.full((C,), 3, jnp.int32))
+    is_corner_t = corner[seg_of_t] == 1
+
+    tokens = jnp.where(
+        is_corner_t,
+        esc_val_t,
+        jnp.where(inside_ins, ibs_val_t, jnp.where(sub_t >= 0, sub_t, cons_tok)),
+    )
+
+    # ---- per-read grouping + reverse-complement --------------------------
+    read_first = seg_mask & (cont == 0)
+    read_id_seg = jnp.cumsum(read_first.astype(jnp.int32)) - read_first.astype(jnp.int32)
+    rid_scatter = jnp.where(read_first, read_id_seg, R)
+    read_rev = jnp.zeros((R,), jnp.int32).at[rid_scatter].max(rev, mode="drop")
+    read_pos = jnp.full((R,), -1, jnp.int32).at[rid_scatter].max(
+        jnp.where(corner == 1, -1, pos), mode="drop"
+    )
+    read_start = jnp.zeros((R,), jnp.int32).at[rid_scatter].max(starts_i, mode="drop")
+    read_len = jnp.zeros((R,), jnp.int32).at[jnp.where(seg_mask, read_id_seg, R)].add(lens, mode="drop")
+    read_corner = jnp.zeros((R,), jnp.int32).at[rid_scatter].max(corner, mode="drop")
+
+    rid_t = read_id_seg[seg_of_t]
+    rev_t = read_rev[rid_t] == 1
+    rstart_t = read_start[rid_t]
+    rlen_t = read_len[rid_t]
+    src = jnp.where(rev_t, rstart_t + (rlen_t - 1 - (ar_t - rstart_t)), ar_t)
+    out = tokens[jnp.clip(src, 0, C - 1)]
+    out = jnp.where(rev_t & (out < 4), 3 - out, out)
+    out = jnp.where(tok_mask, out, PAD_BASE).astype(jnp.int8)
+
+    n_reads = row[D["n_reads"]]
+    read_mask = jnp.arange(R, dtype=jnp.int32) < n_reads
+    return {
+        "tokens": out,
+        "n_tokens": n_tok,
+        "read_pos": jnp.where(read_mask, read_pos + row[D["cons_start"]] * (read_pos >= 0), -1),
+        "read_rev": jnp.where(read_mask, read_rev, 0),
+        "read_start": jnp.where(read_mask, read_start, 0),
+        "read_len": jnp.where(read_mask, read_len, 0),
+        "read_corner": jnp.where(read_mask, read_corner, 0),
+        "n_reads": n_reads,
+    }
+
+
+# --------------------------------------------------------------------------
+# host-side packing of a SageFile into fixed-shape device arrays
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceBlocks:
+    """Fixed-shape, block-major device layout of a SageFile."""
+
+    arrays: dict[str, np.ndarray]  # name -> (n_blocks, cap_words) uint32 (+dir/cons)
+    caps: Any
+    classes: dict[str, tuple[int, ...]]
+    fixed_len: int
+    n_blocks: int
+
+    def block(self, bi: int) -> dict[str, np.ndarray]:
+        return {k: v[bi] for k, v in self.arrays.items()}
+
+
+def _cap_words(sf: SageFile, s: str) -> int:
+    blk_bits = sf.meta.stream_bits.get(f"blk_{s}", 0)
+    return max(2, (blk_bits + 31) // 32 + 1)
+
+
+def prepare_device_blocks(sf: SageFile) -> DeviceBlocks:
+    nb = sf.meta.n_blocks
+    caps = sf.meta.caps
+    arrays: dict[str, np.ndarray] = {}
+    for s in STREAMS:
+        cw = _cap_words(sf, s)
+        buf = np.zeros((nb, cw), dtype=np.uint32)
+        src = sf.streams[s]
+        for bi in range(nb):
+            off = int(sf.directory[bi, D[f"off_{s}"]]) >> 5  # word aligned
+            take = min(cw, max(src.size - off, 0))
+            if take > 0:
+                buf[bi, :take] = src[off : off + take]
+        arrays[s] = buf
+    # consensus windows (2-bit packed, 16 bases/word)
+    ww = caps.window // 16
+    cons = np.zeros((nb, ww), dtype=np.uint32)
+    for bi in range(nb):
+        w0 = int(sf.directory[bi, D["cons_start"]]) // 16
+        take = min(ww, max(sf.consensus2b.size - w0, 0))
+        if take > 0:
+            cons[bi, :take] = sf.consensus2b[w0 : w0 + take]
+    arrays["cons"] = cons
+    # block-local directory (int32-safe: offsets are per-block word slices)
+    dir32 = np.zeros((nb, sf.directory.shape[1]), dtype=np.int32)
+    dir32[:] = np.clip(sf.directory, -(2**31), 2**31 - 1)
+    # base_pos must be block-local before casting (genome may exceed int32)
+    dir32[:, D["base_pos"]] = (sf.directory[:, D["base_pos"]] - sf.directory[:, D["cons_start"]]).astype(np.int32)
+    arrays["dir"] = dir32
+    return DeviceBlocks(
+        arrays=arrays,
+        caps=caps,
+        classes=sf.meta.classes,
+        fixed_len=sf.meta.fixed_read_len,
+        n_blocks=nb,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("caps", "classes", "fixed_len"))
+def _decode_all_jit(arrays, caps, classes, fixed_len):
+    classes = {k: tuple(v) for k, v in classes}
+    return jax.vmap(
+        lambda blk: decode_block_arrays(blk, caps=caps, classes=classes, fixed_len=fixed_len)
+    )(arrays)
+
+
+def decode_file_jax(db: DeviceBlocks) -> dict[str, jax.Array]:
+    """Decode every block of a prepared SageFile (vmapped, jitted)."""
+    classes_h = tuple(sorted((k, tuple(v)) for k, v in db.classes.items()))
+    caps_h = _HashableCaps(db.caps)
+    return _decode_all_jit(db.arrays, caps_h, classes_h, db.fixed_len)
+
+
+class _HashableCaps:
+    """Hashable static wrapper around BlockCaps for jit."""
+
+    def __init__(self, caps) -> None:
+        self._c = caps
+        self._key = tuple(sorted(dataclasses.asdict(caps).items()))
+
+    def __getattr__(self, k):
+        return getattr(self._c, k)
+
+    def __hash__(self) -> int:
+        return hash(self._key)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, _HashableCaps) and self._key == other._key

@@ -1,0 +1,166 @@
+"""SAGe-backed training data pipeline.
+
+The paper's end-to-end pipeline (I/O ∥ decompress ∥ analysis, §3/§7) maps
+onto: host block fetch -> device SAGe decode -> k-mer reformat -> token
+batches, with DOUBLE-BUFFERED prefetch so data preparation overlaps the
+train step exactly like the paper overlaps decompression with mapping
+(batch#i prepares while batch#i-1 trains).
+
+Determinism & fault tolerance: the cursor is (epoch, block index, batch
+offset) — restarting from a checkpoint replays the exact stream (the block
+directory is the unit of restart, mirroring its role as the unit of
+storage/NAND-channel layout in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.core.api import kmer_special_ids, pick_k
+from repro.core.decode_jax import PAD_BASE, DeviceBlocks, prepare_device_blocks
+from repro.core.format import SageFile
+from repro.kernels import ops as KOPS
+
+
+@dataclasses.dataclass
+class Cursor:
+    epoch: int = 0
+    block: int = 0  # next block to decode
+    consumed: int = 0  # k-mer tokens consumed from the global stream
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d) -> "Cursor":
+        return cls(**d)
+
+
+class SageTokenPipeline:
+    """Streams (tokens, labels) LM batches from a SAGe-compressed read set."""
+
+    def __init__(
+        self,
+        sf: SageFile,
+        vocab_size: int,
+        batch: int,
+        seq_len: int,
+        *,
+        use_pallas_decode: bool = False,
+        blocks_per_fetch: int = 4,
+        prefetch: int = 2,
+        cursor: Optional[Cursor] = None,
+        seed: int = 0,
+    ) -> None:
+        self.sf = sf
+        self.db: DeviceBlocks = prepare_device_blocks(sf)
+        self.k = pick_k(vocab_size)
+        self.sp = kmer_special_ids(self.k)
+        self.batch = batch
+        self.seq_len = seq_len
+        self.blocks_per_fetch = blocks_per_fetch
+        self.prefetch = prefetch
+        self.cursor = cursor or Cursor()
+        self.use_pallas = use_pallas_decode
+        self._buf = np.zeros((0,), np.int32)
+        self._skip = 0  # tokens to drop after a cursor restore
+        # deterministic k-mer count per block (tail group hits PAD, dropped)
+        from repro.core.format import D
+        self._kpb = (np.asarray(sf.directory[:, D["n_tokens"]]) // self.k).astype(np.int64)
+        self._decode = jax.jit(
+            lambda arrs: self._decode_blocks(arrs), static_argnums=()
+        )
+
+    # ------------------------------------------------------------------
+    def _decode_blocks(self, arrays):
+        from repro.core.decode_jax import decode_block_arrays
+
+        classes = {k: tuple(v) for k, v in self.db.classes.items()}
+        out = jax.vmap(
+            lambda blk: decode_block_arrays(blk, caps=self.db.caps, classes=classes, fixed_len=self.db.fixed_len)
+        )(arrays)
+        return KOPS.kmer_tokens(out["tokens"], self.k, use_pallas=False)
+
+    def _fetch_tokens(self) -> np.ndarray:
+        """Decode the next group of blocks into a flat k-mer token stream."""
+        nb = self.db.n_blocks
+        ids = [(self.cursor.block + i) % nb for i in range(self.blocks_per_fetch)]
+        wrapped = self.cursor.block + self.blocks_per_fetch >= nb
+        arrays = {k: jax.numpy.asarray(v[ids]) for k, v in self.db.arrays.items()}
+        km = np.asarray(self._decode(arrays))  # (nb_f, C//k)
+        self.cursor.block = (self.cursor.block + self.blocks_per_fetch) % nb
+        if wrapped:
+            self.cursor.epoch += 1
+        flat = km.reshape(-1)
+        out = flat[flat != self.sp["pad"]].astype(np.int32)
+        if self._skip:
+            take = min(self._skip, out.size)
+            out = out[take:]
+            self._skip -= take
+        return out
+
+    def _batches_from_buffer(self) -> Iterator[dict[str, np.ndarray]]:
+        need = self.batch * (self.seq_len + 1)
+        while self._buf.size >= need:
+            chunk = self._buf[:need].reshape(self.batch, self.seq_len + 1)
+            self._buf = self._buf[need:]
+            self.cursor.consumed += need
+            yield {
+                "tokens": chunk[:, :-1].copy(),
+                "labels": chunk[:, 1:].copy(),
+            }
+
+    def batches(self) -> Iterator[dict[str, np.ndarray]]:
+        """Infinite deterministic batch stream (single-threaded)."""
+        while True:
+            while self._buf.size < self.batch * (self.seq_len + 1):
+                self._buf = np.concatenate([self._buf, self._fetch_tokens()])
+            yield from self._batches_from_buffer()
+
+    def prefetched(self) -> Iterator[dict[str, np.ndarray]]:
+        """Double-buffered: decode of fetch#i overlaps training on #i-1."""
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def worker():
+            try:
+                for b in self.batches():
+                    if stop.is_set():
+                        return
+                    q.put(b)
+            except Exception as e:  # pragma: no cover
+                q.put(e)
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            stop.set()
+
+    # ------------------------------------------------------- fault tolerance
+    def state(self) -> dict:
+        return {"cursor": self.cursor.to_json()}
+
+    def restore(self, state: dict) -> None:
+        """Deterministic fast-forward: map the consumed-token count back to
+        (epoch, block, within-block offset) via the block directory."""
+        consumed = int(Cursor.from_json(state["cursor"]).consumed)
+        total = int(self._kpb.sum())
+        epoch, rem = divmod(consumed, total)
+        cum = np.cumsum(self._kpb)
+        block = int(np.searchsorted(cum, rem, side="right"))
+        within = rem - (int(cum[block - 1]) if block else 0)
+        self.cursor = Cursor(epoch=epoch, block=block, consumed=consumed)
+        self._buf = np.zeros((0,), np.int32)
+        self._skip = within

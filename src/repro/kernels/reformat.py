@@ -1,0 +1,70 @@
+"""Pallas kernel for SAGe_Read output formatting (§5.3: "2-bit or 1-hot").
+
+Converts decoded base tokens into the accelerator's desired format:
+  * k-mer LM token ids (packs k bases into one id = the 2-bit format folded
+    onto the assigned archs' vocabularies)
+  * one-hot bf16 planes (the [106]-style format)
+
+Grid tiles the flat token stream; each step handles one (blocks_per_step ×
+TILE) slab in VMEM. Trivially parallel, MXU-free, VPU-bound.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.api import kmer_special_ids
+from repro.core.decode_jax import PAD_BASE
+
+
+def _kmer_kernel(k: int, tok_ref, out_ref):
+    t = tok_ref[0].astype(jnp.int32)  # (TILE,)
+    C = t.shape[0]
+    g = t[: (C // k) * k].reshape(C // k, k)
+    gz = jnp.where(g > 3, 0, g)
+    ids = jnp.zeros((C // k,), jnp.int32)
+    for i in range(k):  # Horner — avoids captured weight constants
+        ids = ids * 4 + gz[:, i]
+    sp = kmer_special_ids(k)
+    has_pad = jnp.any(g == PAD_BASE, axis=-1)
+    has_n = jnp.any(g == 4, axis=-1) & ~has_pad
+    ids = jnp.where(has_pad, sp["pad"], ids)
+    ids = jnp.where(has_n, sp["nblk"], ids)
+    out_ref[0] = ids
+
+
+def kmer_pack_pallas(tokens: jax.Array, k: int, *, interpret: bool = True) -> jax.Array:
+    """tokens: (nb, C) int8 -> (nb, C//k) int32."""
+    nb, C = tokens.shape
+    fn = pl.pallas_call(
+        functools.partial(_kmer_kernel, k),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, C // k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, C // k), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(tokens)
+
+
+def _onehot_kernel(tok_ref, out_ref):
+    t = tok_ref[0].astype(jnp.int32)  # (TILE,)
+    out_ref[0] = (t[:, None] == jnp.arange(4, dtype=jnp.int32)[None, :]).astype(out_ref.dtype)
+
+
+def one_hot_pallas(tokens: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """tokens: (nb, C) int8 -> (nb, C, 4) bf16 (PAD rows all-zero)."""
+    nb, C = tokens.shape
+    fn = pl.pallas_call(
+        _onehot_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, C, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, C, 4), jnp.bfloat16),
+        interpret=interpret,
+    )
+    return fn(tokens)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for SAGe block decode (the paper's SU+RCU in TPU form).
+
+Grid = one step per SAGe block (the analogue of the per-NAND-channel decode
+units, §5.2): every stream's BlockSpec maps grid step i to that block's
+word slice, so each step streams its block's compressed bits HBM->VMEM,
+decodes with the data-parallel scan math of
+:func:`repro.core.decode_jax.decode_block_arrays` (single source of truth,
+shared with the vmap reference), and writes the token tile back.
+
+VMEM sizing (the BlockSpec contract): with the default data-pipeline block
+capacity (tokens<=16Ki, window<=1Mi bases), one grid step's working set is
+  streams:      <= ~0.2 MiB (compressed bits)
+  cons window:  window/16 u32 = 0.25 MiB
+  decode temps: ~24 int32 arrays of C=16Ki = ~1.5 MiB
+comfortably inside a v5e core's VMEM. Capacities are static (from SageMeta),
+so the same kernel serves any read set produced by the encoder.
+
+Validated in interpret mode (CPU container); Mosaic lowering notes: the body
+uses cumsum / sort-free gathers / scatters-with-drop, all expressible on TPU
+(gathers over VMEM-resident arrays; see DESIGN.md §2 hardware notes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.decode_jax import DeviceBlocks, decode_block_arrays
+from repro.core.format import NDIR, STREAMS
+
+OUT_KEYS = ("tokens", "read_pos", "read_rev", "read_start", "read_len", "read_corner")
+
+
+def _kernel(caps, classes, fixed_len, names, *refs):
+    ins = refs[: len(names)]
+    outs = refs[len(names) :]
+    blk = {n: r[0] for n, r in zip(names, ins)}  # drop the leading block dim
+    dec = decode_block_arrays(blk, caps=caps, classes=classes, fixed_len=fixed_len)
+    for key, oref in zip(OUT_KEYS, outs):
+        oref[0] = dec[key].astype(oref.dtype)
+
+
+def sage_decode_pallas(db: DeviceBlocks, *, interpret: bool = True):
+    """Decode all blocks of a prepared SageFile with one pallas_call."""
+    caps = db.caps
+    classes = {k: tuple(v) for k, v in db.classes.items()}
+    nb = db.n_blocks
+    R, C = caps.segs, caps.tokens
+
+    names = list(STREAMS) + ["cons", "dir"]
+    arrays = [jnp.asarray(db.arrays[n]) for n in names]
+
+    in_specs = [
+        pl.BlockSpec((1, a.shape[1]), lambda i: (i, 0)) for a in arrays
+    ]
+    out_shapes = [
+        jax.ShapeDtypeStruct((nb, C), jnp.int8),  # tokens
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_pos
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_rev
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_start
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_len
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_corner
+    ]
+    out_specs = [pl.BlockSpec((1, s.shape[1]), lambda i: (i, 0)) for s in out_shapes]
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, caps, classes, db.fixed_len, names),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+    outs = fn(*arrays)
+    return dict(zip(OUT_KEYS, outs))

@@ -1,0 +1,289 @@
+"""Dry-run case construction: (arch × shape × mesh) -> (step_fn, arg specs).
+
+Everything is jax.ShapeDtypeStruct — no allocation. Param/optimizer specs
+come from jax.eval_shape over the real init functions, so the dry-run
+exercises the exact same code paths the launcher runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import Rules, param_shardings
+from repro.models import lm
+from repro.training.optimizer import adamw_init
+from repro.training.steps import TrainOptions, make_train_step
+
+BF16 = jnp.bfloat16
+
+
+def _zero1_sharding(leaf, pshard: NamedSharding, rules: Rules) -> NamedSharding:
+    """ZeRO-1: additionally shard optimizer moments over the data axes on the
+    first dimension the param sharding leaves unsharded and divisible."""
+    b = rules.batch()
+    if not b:
+        return pshard
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    dsize = 1
+    for a in b:
+        dsize *= sizes[a]
+    spec = list(pshard.spec) + [None] * (len(leaf.shape) - len(pshard.spec))
+    for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+        if ax is None and dsize > 1 and dim % dsize == 0:
+            spec[i] = b
+            break
+    return NamedSharding(rules.mesh, P(*spec))
+
+
+def _sds(tree_shapes, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s), tree_shapes, shardings
+    )
+
+
+def _replicated(tree_shapes, mesh):
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=rep), tree_shapes)
+
+
+def batch_shapes(cfg: ArchConfig, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+    """Input ShapeDtypeStructs for one cell (pre-sharding)."""
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        if cfg.family == "vlm":
+            S_img = int(S * cfg.img_frac)
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - S_img), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S - S_img), jnp.int32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, S_img, cfg.d_model), BF16),
+            }
+        if cfg.family == "encdec":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), BF16),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cell.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            S_img = int(S * cfg.img_frac)
+            out = {
+                "tokens": jax.ShapeDtypeStruct((B, S - S_img), jnp.int32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, S_img, cfg.d_model), BF16),
+            }
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), BF16)
+        return out
+    # decode: one new token against a cache of S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_sharding(batch, rules: Rules):
+    b = rules.batch()
+    mesh = rules.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = 1
+    for a in (b or ()):
+        dsize *= sizes[a]
+
+    def one(l):
+        ok = b is not None and dsize > 1 and l.shape[0] % dsize == 0
+        spec = [b if ok else None] + [None] * (len(l.shape) - 1)
+        return jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_sharding(cache_shapes, rules: Rules, cfg: ArchConfig, *, seq_shard: bool = False):
+    """KV caches: batch on DP axes, KV-heads (or seq for long-context SP) on
+    model; SSM states: heads on model."""
+    mesh = rules.mesh
+    b = rules.batch()
+    m = rules.model_axis
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes[m]
+    dsize = 1
+    for a in (b or ()):
+        dsize *= sizes[a]
+
+    def one(path, l):
+        leaf = str(getattr(path[-1], "key", ""))
+        nd = len(l.shape)
+        spec: list[Any] = [None] * nd
+
+        def put(i, ax, dim_ok=True):
+            if ax is not None and dim_ok:
+                spec[i] = ax
+
+        if leaf in ("k", "v", "xk", "xv"):
+            # (L?, B, T, KV, Dh): prefer KV-head sharding (local attention
+            # math); fall back to seq-sharded cache (flash-decode combine)
+            put(-4, b, l.shape[-4] % max(dsize, 1) == 0)
+            if seq_shard and l.shape[-3] % msize == 0:
+                put(-3, m)
+            elif l.shape[-2] % msize == 0:
+                put(-2, m)
+            elif l.shape[-3] % msize == 0:
+                put(-3, m)
+        elif leaf.startswith("conv"):
+            # (L?, B, w-1, C)
+            put(-3, b, l.shape[-3] % max(dsize, 1) == 0)
+            put(-1, m, l.shape[-1] % msize == 0)
+        elif leaf == "ssm":
+            # (L?, B, H, P, N)
+            put(-4, b, l.shape[-4] % max(dsize, 1) == 0)
+            put(-3, m, l.shape[-3] % msize == 0)
+        return jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def build_sage_fused_case(cfg: ArchConfig, cell: ShapeCell, rules: Rules, opts: TrainOptions = TrainOptions()):
+    """The paper-representative cell: train_step with ON-DEVICE SAGe data
+    preparation fused in front — inputs are compressed block streams (round-
+    robin over the data axis, the paper's channel layout), decoded and
+    k-mer-reformatted inside the compiled step. Proves the paper's 'data
+    preparation off the critical path' contract at the HLO level."""
+    import math
+
+    from repro.core.api import pick_k
+    from repro.core.decode_jax import decode_block_arrays
+    from repro.core.format import BlockCaps, NDIR, STREAMS
+    from repro.kernels import ops as KOPS
+    from repro.training.steps import make_train_step
+
+    assert cell.kind == "train"
+    mesh = rules.mesh
+    B, S = cell.global_batch, cell.seq_len
+    k = pick_k(cfg.vocab)
+    caps = BlockCaps(segs=128, mism=4096, indel=512, multi=128, insb=1024,
+                     escb=2048, tokens=16384, window=65536)
+    classes = {"map": (4, 8, 12, 20), "len": (8,), "cnt": (1, 3, 6, 10), "mp": (4, 7, 2, 9)}
+    fixed_len = 150
+    need_bases = B * (S + 1) * k
+    dsize = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in (rules.batch() or ()):
+        dsize *= sizes[a]
+    nb = math.ceil(need_bases / caps.tokens)
+    nb = (nb + dsize - 1) // dsize * dsize  # round to data-axis multiple
+
+    def words(bits):
+        return max(2, (bits + 31) // 32 + 1)
+
+    stream_caps = {
+        "mapg": words(caps.segs * 4), "mapa": words(caps.segs * 20),
+        "leng": words(caps.segs * 1), "lena": words(caps.segs * 8),
+        "cntg": words(caps.segs * 4), "cnta": words(caps.segs * 10),
+        "mpg": words(caps.mism * 4), "mpa": words(caps.mism * 9),
+        "mbb": words(caps.mism * 2), "idg": words(caps.indel * 2),
+        "idl": words(caps.multi * 8), "ibs": words(caps.insb * 2),
+        "rfl": words(caps.segs * 3), "esc": words(caps.escb * 3),
+    }
+    bspec = NamedSharding(mesh, P(rules.batch(), None))
+    blocks = {s: jax.ShapeDtypeStruct((nb, w), jnp.uint32, sharding=bspec) for s, w in stream_caps.items()}
+    blocks["cons"] = jax.ShapeDtypeStruct((nb, caps.window // 16), jnp.uint32, sharding=bspec)
+    blocks["dir"] = jax.ShapeDtypeStruct((nb, NDIR), jnp.int32, sharding=bspec)
+
+    p_shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    p_shard = param_shardings(p_shapes, rules)
+    params = _sds(p_shapes, p_shard)
+    from repro.training.optimizer import adamw_init
+
+    o_shapes = jax.eval_shape(lambda: adamw_init(jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), p_shapes)))
+    zero1 = jax.tree.map(lambda l, s: _zero1_sharding(l, s, rules), p_shapes, p_shard)
+    opt = _sds(o_shapes, {"m": zero1, "v": zero1, "step": NamedSharding(mesh, P())})
+
+    inner = make_train_step(cfg, opts)
+
+    def fused(params, opt, blocks):
+        out = jax.vmap(
+            lambda blk: decode_block_arrays(blk, caps=caps, classes=classes, fixed_len=fixed_len)
+        )(blocks)
+        km = KOPS.kmer_tokens(out["tokens"], k, use_pallas=False)  # (nb, C//k)
+        from repro.distributed.sharding import shard_act
+
+        flat = km.reshape(-1)[: B * (S + 1)].reshape(B, S + 1)
+        flat = shard_act(jnp.clip(flat, 0, cfg.vocab - 1), "tokens")
+        batch = {"tokens": flat[:, :-1], "labels": flat[:, 1:]}
+        return inner(params, opt, batch)
+
+    return fused, (params, opt, blocks), (0, 1)
+
+
+def build_dp_compressed_case(cfg: ArchConfig, cell: ShapeCell, rules: Rules, opts: TrainOptions, how: str):
+    """Pure-DP train step with the explicit int16/bf16 error-feedback
+    gradient all-reduce (distributed/dp_step.py). Params replicated."""
+    from repro.distributed.dp_step import make_dp_train_step
+    from repro.training.optimizer import adamw_init
+
+    assert cell.kind == "train" and rules.pure_dp, "dp-compress requires --pure-dp train cells"
+    mesh = rules.mesh
+    rep = NamedSharding(mesh, P())
+    p_shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    params = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=rep), p_shapes)
+    o_shapes = jax.eval_shape(lambda: adamw_init(jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), p_shapes)))
+    opt = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=rep), o_shapes)
+    if how == "int16_ef":
+        opt["ef"] = params  # same shapes/sharding, f32
+        opt["ef"] = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32, sharding=rep), p_shapes)
+    batch = batch_sharding(batch_shapes(cfg, cell), rules)
+    fn = make_dp_train_step(cfg, opts, mesh, rules.batch(), compress=how)
+    return fn, (params, opt, batch), (0, 1)
+
+
+def build_case(cfg: ArchConfig, cell: ShapeCell, rules: Rules, opts: TrainOptions = TrainOptions()):
+    """Returns (fn, args_specs tuple, donate_argnums)."""
+    mesh = rules.mesh
+    key = jax.random.PRNGKey(0)
+
+    p_shapes = jax.eval_shape(lambda: lm.init_params(key, cfg))
+    if cell.kind != "train":
+        # serving stores weights in bf16 (halves HBM; standard practice)
+        p_shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, BF16 if l.dtype == jnp.float32 else l.dtype),
+            p_shapes,
+        )
+    p_shard = param_shardings(p_shapes, rules)
+    params = _sds(p_shapes, p_shard)
+    batch = batch_sharding(batch_shapes(cfg, cell), rules)
+
+    if cell.kind == "train":
+        o_shapes = jax.eval_shape(lambda: adamw_init(jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), p_shapes)))
+        zero1 = jax.tree.map(lambda l, s: _zero1_sharding(l, s, rules), p_shapes, p_shard)
+        o_shard = {
+            "m": zero1,
+            "v": zero1,
+            "step": NamedSharding(mesh, P()),
+        }
+        opt = _sds(o_shapes, o_shard)
+        fn = make_train_step(cfg, opts)
+        return fn, (params, opt, batch), (0, 1)
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, cfg, batch["tokens"], max_len=cell.seq_len, chunk=opts.chunk,
+                              patch_embeds=batch.get("patch_embeds"), frames=batch.get("frames"))
+
+        return fn, (params, batch), ()
+
+    # decode
+    seq_shard = cell.seq_len >= 200_000
+    c_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, cell.global_batch, cell.seq_len))
+    cache = cache_sharding(c_shapes, rules, cfg, seq_shard=seq_shard)
+
+    def fn(params, cache, batch):
+        cur = jnp.int32(cell.seq_len - 1)
+        return lm.decode_step(params, cfg, batch["tokens"], cache, cur)
+
+    return fn, (params, cache, batch), (1,)

@@ -1,0 +1,74 @@
+"""Training launcher: SAGe data pipeline -> model zoo -> fault-tolerant loop.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 4 --seq 256
+
+``--smoke`` uses the reduced config (CPU-feasible); omit it on real hardware
+for the full architecture. Auto-resumes from the newest checkpoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.encoder import SageEncoder
+from repro.data.pipeline import SageTokenPipeline
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.training.optimizer import AdamWConfig
+from repro.training.steps import TrainOptions, init_train_state
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def build_pipeline(vocab: int, batch: int, seq: int, ref_len: int = 80_000, depth: float = 4.0, seed: int = 0):
+    ref = make_reference(ref_len, seed=seed)
+    rs = sample_read_set(ref, "illumina", depth=depth, seed=seed + 1)
+    sf = SageEncoder(ref, token_target=16384).encode(rs)
+    return SageTokenPipeline(sf, vocab, batch, seq)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--compress", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    opts = TrainOptions(
+        chunk=min(1024, args.seq),
+        microbatch=args.microbatch,
+        grad_compress=args.compress,
+        adamw=AdamWConfig(lr=args.lr, total_steps=args.steps),
+    )
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg, opts)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M vocab={cfg.vocab}")
+
+    pipe = build_pipeline(cfg.vocab, args.batch, args.seq)
+    tc = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(tc, cfg, opts, params, opt, iter(pipe.prefetched()))
+    trainer.install_signal_handler()
+    if args.resume and trainer.maybe_resume(pipe):
+        print(f"resumed at step {trainer.step}")
+    hist = trainer.run(pipeline=pipe)
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f} after {trainer.step} steps "
+              f"(straggler anomalies: {trainer.monitor.anomalies})")
+
+
+if __name__ == "__main__":
+    main()

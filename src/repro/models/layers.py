@@ -1,0 +1,380 @@
+"""Shared model layers (pure JAX, functional, scan-friendly).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks hold params stacked
+    on a leading L axis and are consumed with jax.lax.scan.
+  * activations flow in ``cdtype`` (bf16 by default); params live in f32.
+  * attention is GQA with an exact-causal blockwise (flash-style) kernel:
+    a single lax.scan over the lower-triangular (q_block, kv_block) pairs,
+    so HLO FLOPs equal true causal FLOPs (roofline honesty) and the HLO
+    stays compact for fast multi-pod compiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=F32, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * s
+
+
+def embed_init(key, vocab: int, d: int, dtype=F32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(F32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def rope_apply(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(F32) * freqs  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_apply(x, positions3, theta: float, sections: tuple[int, int, int]):
+    """Qwen2-VL multimodal RoPE: rotary pairs are split into (t, h, w)
+    sections, each driven by its own position stream.
+
+    x: (B, S, H, Dh); positions3: (B, 3, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    sec = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=dh // 2)
+    pos = jnp.take_along_axis(
+        positions3.astype(F32), sec[None, :, None].repeat(positions3.shape[0], 0), axis=1
+    )  # (B, Dh/2, S) — position stream per rotary pair
+    ang = pos.transpose(0, 2, 1) * freqs  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype=F32) -> dict:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], d, KV * Dh, dtype),
+        "wv": dense_init(ks[2], d, KV * Dh, dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((KV * Dh,), dtype)
+        p["bv"] = jnp.zeros((KV * Dh,), dtype)
+    return p
+
+
+def qkv_project(p, x, cfg):
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (
+        q.reshape(B, S, H, Dh),
+        k.reshape(B, S, KV, Dh),
+        v.reshape(B, S, KV, Dh),
+    )
+
+
+def _pick_chunk(S: int, chunk: int) -> int:
+    c = min(chunk, S)
+    while S % c != 0:  # largest divisor of S not exceeding the request
+        c -= 1
+    return c
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def causal_flash(q, k, v, chunk: int = 1024, bidirectional: bool = False):
+    """Blockwise (flash) attention, SPMD-friendly formulation.
+
+    One lax.scan over KV blocks; every step scores ALL queries against one
+    KV block with an online-softmax update. The query sequence axis stays a
+    plain tensor dimension throughout, so GSPMD shards it (SP/context
+    parallelism) without per-step re-gathers — the pair-list formulation
+    caused O(layers x blocks) all-gathers of the whole K/V. The price is
+    masked upper-triangle work (<=2x attention FLOPs, ~1.6x at 4k/1024);
+    recorded in EXPERIMENTS.md and attacked in §Perf.
+
+    q: (B,S,H,Dh); k, v: (B,S,KV,Dh), H % KV == 0. O(S) residuals
+    (out + lse); hand-written flash backward recomputes scores per block."""
+    out, _ = _flash_fwd_impl(q, k, v, chunk, bidirectional)
+    return out
+
+
+def _block_mask(qpos, j, c, s):
+    """-inf out keys after the query position (causal). s: (B,S,H,c)."""
+    kpos = j * c + jax.lax.iota(jnp.int32, c)
+    ok = qpos[:, None] >= kpos[None, :]  # (S, c)
+    return jnp.where(ok[None, :, None, :], s, -jnp.inf)
+
+
+def _flash_fwd_impl(q, k, v, chunk, bidirectional):
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    kb = k.reshape(B, n, c, KV, Dh)
+    vb = v.reshape(B, n, c, KV, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    qpos = jax.lax.iota(jnp.int32, S)
+    m0 = jnp.full((B, S, H), -jnp.inf, F32)
+    l0 = jnp.zeros((B, S, H), F32)
+    a0 = jnp.zeros((B, S, H, Dh), F32)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)  # (B,c,KV,Dh)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        # expand GQA groups to full heads: H stays ONE tensor dim, so GSPMD
+        # can shard heads (H % tp == 0) or fall back to sharding S cleanly
+        kjh = jnp.repeat(kj, G, axis=2)  # (B,c,H,Dh)
+        vjh = jnp.repeat(vj, G, axis=2)
+        s = jnp.einsum("bqhd,bphd->bqhp", q, kjh, preferred_element_type=F32) * scale
+        if not bidirectional:
+            s = _block_mask(qpos, j, c, s)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        live = m_new > -jnp.inf
+        p = jnp.where(live[..., None], jnp.exp(s - jnp.where(live, m_new, 0.0)[..., None]), 0.0)
+        corr = jnp.where(m > -jnp.inf, jnp.exp(m - jnp.where(live, m_new, 0.0)), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        a_new = acc * corr[..., None] + jnp.einsum(
+            "bqhp,bphd->bqhd", p.astype(vjh.dtype), vjh, preferred_element_type=F32
+        )
+        return (m_new, l_new, a_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,S,H)
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, chunk, bidirectional):
+    out, lse = _flash_fwd_impl(q, k, v, chunk, bidirectional)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(chunk, bidirectional, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    c = _pick_chunk(S, chunk)
+    n = S // c
+    kb = k.reshape(B, n, c, KV, Dh)
+    vb = v.reshape(B, n, c, KV, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    qpos = jax.lax.iota(jnp.int32, S)
+    Dsum = jnp.sum(dout.astype(F32) * out.astype(F32), axis=-1)  # (B,S,H)
+
+    dq0 = jnp.zeros((B, S, H, Dh), F32)
+    dk0 = jnp.zeros((B, n, c, KV, Dh), F32)
+    dv0 = jnp.zeros((B, n, c, KV, Dh), F32)
+
+    def body(carry, j):
+        dq, dk, dv = carry
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        kjh = jnp.repeat(kj, G, axis=2)
+        vjh = jnp.repeat(vj, G, axis=2)
+        s = jnp.einsum("bqhd,bphd->bqhp", q, kjh, preferred_element_type=F32) * scale
+        if not bidirectional:
+            s = _block_mask(qpos, j, c, s)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - lse[..., None]), 0.0)  # (B,S,H,c)
+        dvh = jnp.einsum("bqhp,bqhd->bphd", p, dout.astype(F32), preferred_element_type=F32)
+        dp = jnp.einsum("bqhd,bphd->bqhp", dout.astype(F32), vjh.astype(F32), preferred_element_type=F32)
+        ds = p * (dp - Dsum[..., None]) * scale
+        dq = dq + jnp.einsum("bqhp,bphd->bqhd", ds, kjh.astype(F32), preferred_element_type=F32)
+        dkh = jnp.einsum("bqhp,bqhd->bphd", ds, q.astype(F32), preferred_element_type=F32)
+        dk_j = dkh.reshape(B, c, KV, G, Dh).sum(3)  # fold groups back to KV
+        dv_j = dvh.reshape(B, c, KV, G, Dh).sum(3)
+        dk = jax.lax.dynamic_update_index_in_dim(dk, dk_j, j, 1)
+        dv = jax.lax.dynamic_update_index_in_dim(dv, dv_j, j, 1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), jnp.arange(n))
+    return (
+        dq.astype(q.dtype),
+        dk.reshape(B, S, KV, Dh).astype(k.dtype),
+        dv.reshape(B, S, KV, Dh).astype(v.dtype),
+    )
+
+
+causal_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_train(p, x, cfg, positions=None, positions3=None, chunk: int = 1024, bidirectional: bool = False, collect_kv: bool = False):
+    B, S, _ = x.shape
+    q, k, v = qkv_project(p, x, cfg)
+    if cfg.head_dim > 0 and not cfg.learned_pos:
+        if cfg.mrope:
+            q = mrope_apply(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = mrope_apply(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            pos = positions if positions is not None else jnp.arange(S, dtype=jnp.int32)[None, :]
+            q = rope_apply(q, pos, cfg.rope_theta)
+            k = rope_apply(k, pos, cfg.rope_theta)
+    o = causal_flash(q, k, v, chunk, bidirectional)
+    o = shard_act(o.reshape(B, S, -1), "act_heads")
+    out = o @ p["wo"].astype(x.dtype)
+    if collect_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(p, x, kv_out, cfg):
+    """Encoder-decoder cross attention (full, non-causal, no rope)."""
+    B, S, _ = x.shape
+    T = kv_out.shape[1]
+    H, KVh, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (kv_out @ p["wk"].astype(x.dtype)).reshape(B, T, KVh, Dh)
+    v = (kv_out @ p["wv"].astype(x.dtype)).reshape(B, T, KVh, Dh)
+    o = causal_flash(q, k, v, min(1024, S), True) if S == T else _full_attn(q, k, v)
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def _full_attn(q, k, v):
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, Dh)
+    s = jnp.einsum("bqkgd,bpkd->bqkgp", qg, k, preferred_element_type=F32) / math.sqrt(Dh)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgp,bpkd->bqkgd", a.astype(v.dtype), v, preferred_element_type=F32)
+    return o.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attention_decode(p, x, cache_k, cache_v, cur_index, cfg, positions=None, positions3=None):
+    """Single-token decode against a KV cache.
+
+    x: (B,1,d); cache_k/v: (B, T, KV, Dh); cur_index: scalar int32 (tokens
+    already in cache). Returns (out (B,1,d), new_k, new_v)."""
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = qkv_project(p, x, cfg)
+    if not cfg.learned_pos:
+        if cfg.mrope:
+            q = mrope_apply(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = mrope_apply(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            pos = positions if positions is not None else jnp.full((B, 1), cur_index, jnp.int32)
+            q = rope_apply(q, pos, cfg.rope_theta)
+            k = rope_apply(k, pos, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, cur_index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, cur_index, 0, 0))
+    qg = q.reshape(B, 1, KV, H // KV, Dh)
+    s = jnp.einsum("bkgd,bpkd->bkgp", qg[:, 0], ck, preferred_element_type=F32)
+    s = s / math.sqrt(Dh)
+    valid = jnp.arange(T) <= cur_index
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    a = jax.nn.softmax(s.astype(F32), axis=-1)
+    o = jnp.einsum("bkgp,bpkd->bkgd", a.astype(cv.dtype), cv, preferred_element_type=F32)
+    o = o.reshape(B, 1, H * Dh).astype(x.dtype)
+    return o @ p["wo"].astype(x.dtype), ck, cv
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d: int, ff: int, gated: bool, dtype=F32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, ff, dtype), "down": dense_init(ks[1], ff, d, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str, gated: bool):
+    u = x @ p["up"].astype(x.dtype)
+    if gated:
+        g = x @ p["gate"].astype(x.dtype)
+        h = _act(g, act) * u
+    else:
+        h = _act(u, act)
+    h = shard_act(h, "act_ff")
+    return h @ p["down"].astype(x.dtype)
+
+
+def _act(x, name: str):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None, z_loss: float = 0.0):
+    """Stable CE in f32; logits (..., V), labels (...) int32."""
+    lf = logits.astype(F32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()

@@ -1,0 +1,500 @@
+"""Unified model zoo: one functional model covering the assigned families.
+
+  dense | vlm   embed -> scan[(GQA attn + MLP)] -> norm -> head
+  moe           embed -> scan[(GQA attn + MoE)] -> norm -> head
+  ssm           embed -> scan[Mamba2 block]     -> norm -> head
+  hybrid        embed -> scan[groups: k Mamba2 layers + SHARED attn block]
+  encdec        frames(stub) -> enc scan; tokens -> dec scan (self+cross)
+
+All forwards are scan-over-stacked-layer-params (compact HLO => fast 512-dev
+compiles), remat-wrapped for training, bf16 activations, f32 params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stacked(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _layer_init(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"norm1": jnp.zeros((cfg.d_model,)), "ssm": S.ssm_init(ks[0], cfg)}
+    if cfg.family == "hybrid":
+        return {"norm1": jnp.zeros((cfg.d_model,)), "ssm": S.ssm_init(ks[0], cfg)}
+    p = {
+        "norm1": jnp.zeros((cfg.d_model,)),
+        "norm2": jnp.zeros((cfg.d_model,)),
+        "attn": L.attn_init(ks[0], cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = M.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "norm_f": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[1], cfg.d_model, cfg.vocab)
+
+    if cfg.family == "encdec":
+        p["enc_layers"] = _stacked(ks[2], cfg.n_enc_layers, lambda k: _enc_layer_init(k, cfg))
+        p["dec_layers"] = _stacked(ks[3], cfg.n_layers, lambda k: _dec_layer_init(k, cfg))
+        p["enc_norm_f"] = {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))}
+        p["pos_emb_enc"] = jax.random.normal(ks[4], (32_768, cfg.d_model)) * 0.01
+        p["pos_emb_dec"] = jax.random.normal(ks[5], (32_768, cfg.d_model)) * 0.01
+        return p
+
+    if cfg.family == "hybrid":
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        groups = cfg.n_layers // cfg.attn_every
+        p["layers"] = _stacked(
+            ks[2], groups, lambda k: _stacked(k, cfg.attn_every, lambda kk: _layer_init(kk, cfg))
+        )
+        # ONE shared attention block (zamba2): reused at every group boundary
+        p["shared_attn"] = {
+            "norm1": jnp.zeros((cfg.d_model,)),
+            "norm2": jnp.zeros((cfg.d_model,)),
+            "attn": L.attn_init(ks[3], cfg),
+            "mlp": L.mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+        }
+        return p
+
+    p["layers"] = _stacked(ks[2], cfg.n_layers, lambda k: _layer_init(k, cfg))
+    return p
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))},
+        "ln2": {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))},
+        "attn": L.attn_init(ks[0], cfg),
+        "enc_mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))},
+        "ln2": {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))},
+        "ln3": {"scale": jnp.ones((cfg.d_model,)), "bias": jnp.zeros((cfg.d_model,))},
+        "attn": L.attn_init(ks[0], cfg),
+        "xattn": L.attn_init(ks[1], cfg),
+        "dec_mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _decoder_block(lp, x, cfg, positions, positions3, chunk):
+    if cfg.family in ("ssm",) or (cfg.family == "hybrid"):
+        h, _ = S.ssm_forward(lp["ssm"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg)
+        return x + h, 0.0
+    h = L.attention_train(
+        lp["attn"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg,
+        positions=positions, positions3=positions3, chunk=chunk,
+    )
+    x = x + h
+    y = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h2, aux = M.moe_apply(lp["moe"], y, cfg)
+    else:
+        h2, aux = L.mlp_apply(lp["mlp"], y, cfg.act, cfg.gated_mlp), 0.0
+    return x + h2, aux
+
+
+def _shared_attn_block(sp, x, cfg, positions, chunk):
+    h = L.attention_train(sp["attn"], L.rmsnorm(x, sp["norm1"], cfg.norm_eps), cfg, positions=positions, chunk=chunk)
+    x = x + h
+    h2 = L.mlp_apply(sp["mlp"], L.rmsnorm(x, sp["norm2"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+    return x + h2
+
+
+def _mrope_positions(cfg, B, S_img, S_text):
+    """(B, 3, S) position streams: image patches on an (h, w) grid at t=0,
+    then text tokens advancing all three streams together."""
+    side = max(int(S_img ** 0.5), 1)
+    i = jnp.arange(S_img, dtype=jnp.int32)
+    img = jnp.stack([jnp.zeros_like(i), i // side, i % side])
+    t0 = jnp.maximum(jnp.max(img) + 1, 1)
+    t = jnp.arange(S_text, dtype=jnp.int32) + t0
+    txt = jnp.stack([t, t, t])
+    pos = jnp.concatenate([img, txt], axis=1)  # (3, S)
+    return jnp.broadcast_to(pos[None], (B, 3, S_img + S_text))
+
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    *,
+    patch_embeds: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+    remat: bool = True,
+    remat_policy: str = "nothing",
+    chunk: int = 1024,
+    dtype=BF16,
+):
+    """Training/prefill forward. Returns (logits, aux_loss).
+
+    vlm: x = [patch_embeds ; embed(tokens)] with M-RoPE positions; logits
+    returned for the text positions only.
+    encdec: ``frames`` (B, T, d) stub embeddings feed the encoder."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, cfg, tokens, frames, remat=remat, remat_policy=remat_policy, chunk=chunk, dtype=dtype)
+
+    B, S_text = tokens.shape
+    x = params["embed"].astype(dtype)[tokens]
+    positions3 = None
+    positions = None
+    if cfg.family == "vlm":
+        assert patch_embeds is not None
+        S_img = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(dtype), x], axis=1)
+        positions3 = _mrope_positions(cfg, B, S_img, S_text)
+    x = shard_act(x, "act_btd")
+
+    body = functools.partial(_decoder_block, cfg=cfg, positions=positions, positions3=positions3, chunk=chunk)
+    if remat:
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat_policy])
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_step(x, glp):
+            def inner(xx, lp):
+                y, _ = body(lp, xx)
+                return shard_act(y, "act_btd"), None
+
+            x, _ = jax.lax.scan(inner, x, glp)
+            x = _shared_attn_block(shared, x, cfg, positions, chunk)
+            return shard_act(x, "act_btd"), None
+
+        x, _ = jax.lax.scan(group_step, x, params["layers"])
+        aux_total = 0.0
+    else:
+        def step(carry, lp):
+            x, aux = carry
+            y, a = body(lp, x)
+            return (shard_act(y, "act_btd"), aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(step, (x, jnp.zeros((), F32)), params["layers"])
+
+    x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, -S_text:]
+    logits = _head(params, cfg, x)
+    return logits, aux_total
+
+
+def _head(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    return shard_act(logits, "act_btv")
+
+
+def _encdec_forward(params, cfg, tokens, frames, *, remat, chunk, dtype, remat_policy="nothing"):
+    B, S = tokens.shape
+    T = frames.shape[1]
+    e = frames.astype(dtype) + params["pos_emb_enc"].astype(dtype)[:T][None]
+    e = shard_act(e, "act_btd")
+
+    def enc_body(lp, x):
+        h = L.attention_train(lp["attn"], L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps), cfg, chunk=chunk, bidirectional=True)
+        x = x + h
+        h2 = L.mlp_apply(lp["enc_mlp"], L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+        return x + h2
+
+    if remat:
+        enc_body = jax.checkpoint(enc_body, policy=REMAT_POLICIES[remat_policy])
+    e, _ = jax.lax.scan(lambda x, lp: (shard_act(enc_body(lp, x), "act_btd"), None), e, params["enc_layers"])
+    enc_out = e
+
+    x = params["embed"].astype(dtype)[tokens] + params["pos_emb_dec"].astype(dtype)[:S][None]
+    x = shard_act(x, "act_btd")
+
+    def dec_body(lp, x):
+        h = L.attention_train(lp["attn"], L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps), cfg, chunk=chunk)
+        x = x + h
+        h2 = L.cross_attention(lp["xattn"], L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps), enc_out, cfg)
+        x = x + h2
+        h3 = L.mlp_apply(lp["dec_mlp"], L.layernorm(x, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+        return x + h3
+
+    if remat:
+        dec_body = jax.checkpoint(dec_body, policy=REMAT_POLICIES[remat_policy])
+    x, _ = jax.lax.scan(lambda x, lp: (shard_act(dec_body(lp, x), "act_btd"), None), x, params["dec_layers"])
+    x = L.layernorm(x, params["enc_norm_f"]["scale"], params["enc_norm_f"]["bias"], cfg.norm_eps)
+    return _head(params, cfg, x), 0.0
+
+
+# --------------------------------------------------------------------------
+# KV caches + decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=BF16):
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "ssm":
+        st = S.ssm_init_state(cfg, batch)
+        return {"ssm": jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape).astype(x.dtype), st)}
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        st = S.ssm_init_state(cfg, batch)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None, None], (groups, cfg.attn_every) + x.shape).astype(x.dtype), st
+        )
+        return {
+            "ssm": stacked,
+            "k": jnp.zeros((groups, batch, max_len, KV, Dh), dtype),
+            "v": jnp.zeros((groups, batch, max_len, KV, Dh), dtype),
+        }
+    if cfg.family == "encdec":
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, KV, Dh), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, KV, Dh), dtype),
+            "xk": jnp.zeros((cfg.n_layers, batch, max_len, KV, Dh), dtype),
+            "xv": jnp.zeros((cfg.n_layers, batch, max_len, KV, Dh), dtype),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, KV, Dh), dtype),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, cur_index, *, dtype=BF16, enc_out=None):
+    """One serving step: token (B, 1) int32 -> (logits (B, 1, V), new cache).
+
+    ``cur_index``: number of tokens already in the cache (scalar int32)."""
+    B = token.shape[0]
+    x = params["embed"].astype(dtype)[token]
+
+    if cfg.family == "ssm":
+        def step(x, inp):
+            lp, st = inp
+            h, st2 = S.ssm_forward(lp["ssm"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg, state=st)
+            return x + h, st2
+
+        x, new_ssm = jax.lax.scan(step, x, (params["layers"], cache["ssm"]))
+        x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+        return _head(params, cfg, x), {"ssm": new_ssm}
+
+    if cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, inp):
+            glp, gst, gk, gv = inp
+
+            def inner(x, lpst):
+                lp, st = lpst
+                h, st2 = S.ssm_forward(lp["ssm"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg, state=st)
+                return x + h, st2
+
+            x, st2 = jax.lax.scan(inner, x, (glp, gst))
+            h, nk, nv = L.attention_decode(
+                shared["attn"], L.rmsnorm(x, shared["norm1"], cfg.norm_eps), gk, gv, cur_index, cfg
+            )
+            x = x + h
+            x = x + L.mlp_apply(shared["mlp"], L.rmsnorm(x, shared["norm2"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+            return x, (st2, nk, nv)
+
+        x, (nst, nk, nv) = jax.lax.scan(group, x, (params["layers"], cache["ssm"], cache["k"], cache["v"]))
+        x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+        return _head(params, cfg, x), {"ssm": nst, "k": nk, "v": nv}
+
+    if cfg.family == "encdec":
+        x = x + params["pos_emb_dec"].astype(dtype)[cur_index][None, None]
+
+        def step(x, inp):
+            lp, ck, cv, xk, xv = inp
+            h, nk, nv = L.attention_decode(lp["attn"], L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps), ck, cv, cur_index, cfg)
+            x = x + h
+            # cross attention against prefilled enc KV
+            y = L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+            q = (y @ lp["xattn"]["wq"].astype(y.dtype)).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            o = _cached_cross(q, xk, xv)
+            x = x + o.reshape(B, 1, -1) @ lp["xattn"]["wo"].astype(y.dtype)
+            x = x + L.mlp_apply(lp["dec_mlp"], L.layernorm(x, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+            return x, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(step, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        x = L.layernorm(x, params["enc_norm_f"]["scale"], params["enc_norm_f"]["bias"], cfg.norm_eps)
+        return _head(params, cfg, x), {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}
+
+    # dense / moe / vlm
+    positions3 = None
+    positions = None
+    if cfg.mrope:
+        pos = jnp.full((B, 1), cur_index, jnp.int32)
+        positions3 = jnp.broadcast_to(pos[:, None, :], (B, 3, 1))
+    else:
+        positions = jnp.full((B, 1), cur_index, jnp.int32)
+
+    def step(carry, inp):
+        x = carry
+        lp, ck, cv = inp
+        h, nk, nv = L.attention_decode(
+            lp["attn"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), ck, cv, cur_index, cfg,
+            positions=positions, positions3=positions3,
+        )
+        x = x + h
+        y = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h2, _ = M.moe_apply(lp["moe"], y, cfg)
+        else:
+            h2 = L.mlp_apply(lp["mlp"], y, cfg.act, cfg.gated_mlp)
+        return x + h2, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(step, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return _head(params, cfg, x), {"k": nk, "v": nv}
+
+
+def prefill(params, cfg: ArchConfig, tokens, max_len: int, *, patch_embeds=None, frames=None, chunk: int = 1024, dtype=BF16):
+    """Process a full prompt, returning (last-token logits, filled cache).
+
+    The cache is sized ``max_len`` (>= prompt length) so decode can continue
+    in place. Attention K/V are collected as scan outputs; SSM families
+    return their final recurrent states (constant size)."""
+    B, S_text = tokens.shape
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def pad_kv(kv):  # (L?, B, S, KV, Dh) -> (..., max_len, ...)
+        padw = [(0, 0)] * kv.ndim
+        padw[-3] = (0, max_len - kv.shape[-3])
+        return jnp.pad(kv, padw)
+
+    if cfg.family == "ssm":
+        x = params["embed"].astype(dtype)[tokens]
+
+        def step(x, lp):
+            h, st = S.ssm_forward(lp["ssm"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg)
+            return x + h, st
+
+        x, states = jax.lax.scan(step, x, params["layers"])
+        x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+        return _head(params, cfg, x[:, -1:]), {"ssm": states}
+
+    if cfg.family == "hybrid":
+        x = params["embed"].astype(dtype)[tokens]
+        shared = params["shared_attn"]
+
+        def group(x, glp):
+            def inner(x, lp):
+                h, st = S.ssm_forward(lp["ssm"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg)
+                return x + h, st
+
+            x, st = jax.lax.scan(inner, x, glp)
+            h, (k, v) = L.attention_train(shared["attn"], L.rmsnorm(x, shared["norm1"], cfg.norm_eps), cfg, chunk=chunk, collect_kv=True)
+            x = x + h
+            x = x + L.mlp_apply(shared["mlp"], L.rmsnorm(x, shared["norm2"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+            return x, (st, k, v)
+
+        x, (states, ks, vs) = jax.lax.scan(group, x, params["layers"])
+        x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+        return _head(params, cfg, x[:, -1:]), {"ssm": states, "k": pad_kv(ks), "v": pad_kv(vs)}
+
+    if cfg.family == "encdec":
+        assert frames is not None
+        T = frames.shape[1]
+        e = frames.astype(dtype) + params["pos_emb_enc"].astype(dtype)[:T][None]
+
+        def enc_body(x, lp):
+            h = L.attention_train(lp["attn"], L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps), cfg, chunk=chunk, bidirectional=True)
+            x = x + h
+            h2 = L.mlp_apply(lp["enc_mlp"], L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+            return x + h2, None
+
+        enc_out, _ = jax.lax.scan(enc_body, e, params["enc_layers"])
+        x = params["embed"].astype(dtype)[tokens] + params["pos_emb_dec"].astype(dtype)[:S_text][None]
+
+        def dec_body(x, lp):
+            h, (k, v) = L.attention_train(lp["attn"], L.layernorm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps), cfg, chunk=chunk, collect_kv=True)
+            x = x + h
+            y = L.layernorm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+            xk = (enc_out @ lp["xattn"]["wk"].astype(y.dtype)).reshape(B, T, KV, Dh)
+            xv = (enc_out @ lp["xattn"]["wv"].astype(y.dtype)).reshape(B, T, KV, Dh)
+            x = x + L.cross_attention(lp["xattn"], y, enc_out, cfg)
+            h3 = L.mlp_apply(lp["dec_mlp"], L.layernorm(x, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps), cfg.act, cfg.gated_mlp)
+            return x + h3, (k, v, xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(dec_body, x, params["dec_layers"])
+        x = L.layernorm(x, params["enc_norm_f"]["scale"], params["enc_norm_f"]["bias"], cfg.norm_eps)
+        return _head(params, cfg, x[:, -1:]), {
+            "k": pad_kv(ks), "v": pad_kv(vs), "xk": pad_kv(xks), "xv": pad_kv(xvs),
+        }
+
+    # dense / moe / vlm
+    x = params["embed"].astype(dtype)[tokens]
+    positions3 = None
+    if cfg.family == "vlm":
+        assert patch_embeds is not None
+        S_img = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(dtype), x], axis=1)
+        positions3 = _mrope_positions(cfg, B, S_img, S_text)
+    x = shard_act(x, "act_btd")
+
+    def step(x, lp):
+        h, (k, v) = L.attention_train(
+            lp["attn"], L.rmsnorm(x, lp["norm1"], cfg.norm_eps), cfg,
+            positions3=positions3, chunk=chunk, collect_kv=True,
+        )
+        x = x + h
+        y = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h2, _ = M.moe_apply(lp["moe"], y, cfg)
+        else:
+            h2 = L.mlp_apply(lp["mlp"], y, cfg.act, cfg.gated_mlp)
+        return shard_act(x + h2, "act_btd"), (k, v)
+
+    x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+    x = L.rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return _head(params, cfg, x[:, -1:]), {"k": pad_kv(ks), "v": pad_kv(vs)}
+
+
+def _cached_cross(q, xk, xv):
+    import math
+
+    B, _, H, Dh = q.shape
+    KV = xk.shape[2]
+    qg = q.reshape(B, 1, KV, H // KV, Dh)
+    s = jnp.einsum("bqkgd,bpkd->bkgp", qg, xk, preferred_element_type=F32) / math.sqrt(Dh)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgp,bpkd->bkgd", a.astype(xv.dtype), xv, preferred_element_type=F32).reshape(B, 1, H * Dh).astype(q.dtype)

@@ -1,0 +1,162 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+Chunked SSD: sequence split into chunks; intra-chunk term is a small
+quadratic einsum (MXU-friendly), inter-chunk state carried by a lax.scan —
+linear in sequence length, which is what makes the long_500k cells feasible.
+Decode is a single constant-size state update (no KV cache).
+
+The intra-chunk math is mirrored by the Pallas kernel in
+repro/kernels/ssd_chunk.py; this file is its jnp reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import F32, dense_init, rmsnorm
+from repro.distributed.sharding import shard_act
+
+
+def ssm_init(key, cfg, dtype=F32) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner or 2 * d
+    H = cfg.ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    w = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], d, di, dtype),
+        "in_x": dense_init(ks[1], d, di, dtype),
+        "in_bc": dense_init(ks[2], d, 2 * G * N, dtype),
+        "dt_w": dense_init(ks[3], d, H, dtype),
+        "dt_bias": jnp.zeros((H,), dtype) + jnp.log(jnp.expm1(jnp.asarray(0.01, dtype))),
+        "ssm_a": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),  # A = -exp(a)
+        "ssm_d": jnp.ones((H,), dtype),
+        "conv_x": jax.random.normal(ks[4], (w, di), dtype) * 0.2,
+        "conv_bc": jax.random.normal(ks[5], (w, 2 * G * N), dtype) * 0.2,
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv; x: (B, S, C), w: (W, C). With ``state``
+    ((B, W-1, C) trailing context) for decode continuation."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, t : t + x.shape[1], :] * w[t].astype(x.dtype) for t in range(W))
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, state0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    B_, C_: (B,S,H,N) (groups pre-broadcast). Returns (y, final_state)."""
+    Bb, S0, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S0)
+    pad = (-S0) % Q
+    if pad:  # padded steps carry dt=0 => identity state transition
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B_, C_ = zf(x), zf(dt), zf(B_), zf(C_)
+    S = S0 + pad
+    nc = S // Q
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B_.reshape(Bb, nc, Q, H, N)
+    Cc = C_.reshape(Bb, nc, Q, H, N)
+    a = (dtc.astype(F32) * A.astype(F32)) # (B,nc,Q,H) log-decay <= 0
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, P, N), F32)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(state, inp):
+        xq, dq, aq, bq, cq = inp  # (B,Q,H,P), (B,Q,H), (B,Q,H), (B,Q,H,N) x2
+        cum = jnp.cumsum(aq, axis=1)  # (B,Q,H)
+        total = cum[:, -1]  # (B,H)
+        # intra-chunk quadratic term
+        L = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        L = jnp.where(tri[None, :, :, None], L, 0.0)
+        CB = jnp.einsum("bqhn,bphn->bqph", cq, bq, preferred_element_type=F32)
+        M = CB * L
+        xdt = xq.astype(F32) * dq[..., None]
+        y_intra = jnp.einsum("bqph,bphd->bqhd", M, xdt, preferred_element_type=F32)
+        # state contribution
+        decay_in = jnp.exp(cum)  # (B,Q,H)
+        y_state = jnp.einsum("bqhn,bhdn->bqhd", cq, state, preferred_element_type=F32)
+        y_state = y_state * decay_in[..., None]
+        # next state
+        decay_out = jnp.exp(total[:, None, :] - cum)  # (B,Q,H)
+        state_new = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqhn,bqhd->bhdn", bq * (dq * decay_out)[..., None], xq.astype(F32),
+            preferred_element_type=F32,
+        )
+        return state_new, (y_intra + y_state)
+
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3).astype(F32),
+        a.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3, 4).astype(F32),
+        Cc.transpose(1, 0, 2, 3, 4).astype(F32),
+    )
+    state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)[:, :S0]
+    return y.astype(x.dtype), state
+
+
+def ssm_forward(p, xin, cfg, state=None):
+    """Full Mamba2 block. xin: (B, S, d). ``state`` (decode continuation) is
+    a dict {"conv_x", "conv_bc", "ssm"}; returns (out, new_state)."""
+    B, S, d = xin.shape
+    di = cfg.d_inner or 2 * d
+    H, P = cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z = xin @ p["in_z"].astype(xin.dtype)
+    x = xin @ p["in_x"].astype(xin.dtype)
+    bc = xin @ p["in_bc"].astype(xin.dtype)
+    dt = jax.nn.softplus((xin @ p["dt_w"].astype(xin.dtype)).astype(F32) + p["dt_bias"].astype(F32))
+    x = shard_act(x, "act_ff")
+    z = shard_act(z, "act_ff")
+    cs_x = None if state is None else state["conv_x"]
+    cs_bc = None if state is None else state["conv_bc"]
+    x, ncs_x = _causal_conv(x, p["conv_x"], cs_x)
+    bc, ncs_bc = _causal_conv(bc, p["conv_bc"], cs_bc)
+    Bv, Cv = jnp.split(bc, 2, axis=-1)
+    rep = H // G
+    Bv = Bv.reshape(B, S, G, N).repeat(rep, axis=2)
+    Cv = Cv.reshape(B, S, G, N).repeat(rep, axis=2)
+    xh = x.reshape(B, S, H, P)
+    A = -jnp.exp(p["ssm_a"].astype(F32))
+    s0 = None if state is None else state["ssm"]
+    y, s_new = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm_chunk, s0)
+    y = y + xh * p["ssm_d"].astype(xin.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(xin.dtype)
+    new_state = {"conv_x": ncs_x, "conv_bc": ncs_bc, "ssm": s_new}
+    return out, new_state
+
+
+def ssm_decode_step(p, xin, cfg, state):
+    """Single-token decode: xin (B, 1, d); state dict as above."""
+    return ssm_forward(p, xin, cfg, state)
+
+
+def ssm_init_state(cfg, batch: int, dtype=F32) -> dict:
+    di = cfg.d_inner or 2 * cfg.d_model
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    G = cfg.ssm_groups
+    w = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, di), dtype),
+        "conv_bc": jnp.zeros((batch, w - 1, 2 * G * N), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), F32),
+    }

@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode over the model zoo.
+
+Requests are padded into fixed (batch, prompt_len) slots; prefill builds the
+KV cache (or SSM states) and the decode loop emits tokens with greedy or
+temperature sampling. The SAGe pipeline can feed prompts directly (decoded
+reads as k-mer tokens) — the paper's "send each read to the analysis system
+as soon as it is decoded" contract (§5.1)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_prompt: int = 512
+    max_new: int = 64
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig = ServeConfig()) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
+        self._step = jax.jit(self._step_impl)
+
+    def _prefill_impl(self, tokens, frames, max_len: int):
+        kw = {}
+        if self.cfg.family == "encdec":
+            kw["frames"] = frames
+        if self.cfg.family == "vlm":
+            kw["patch_embeds"] = frames
+        return lm.prefill(self.params, self.cfg, tokens, max_len=max_len, **kw)
+
+    def _step_impl(self, tok, cache, idx, key):
+        logits, cache = lm.decode_step(self.params, self.cfg, tok, cache, idx)
+        lg = logits[:, -1].astype(jnp.float32)
+        if self.sc.temperature > 0:
+            nxt = jax.random.categorical(key, lg / self.sc.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    def generate(self, prompts: list[np.ndarray], frames: Optional[np.ndarray] = None) -> list[np.ndarray]:
+        """prompts: list of int32 token arrays (<= max_prompt)."""
+        B = len(prompts)
+        P = self.sc.max_prompt
+        toks = np.zeros((B, P), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, -len(p) :] = p[:P]  # left-pad (keeps last token at P-1)
+        max_len = P + self.sc.max_new + 1
+        if frames is None and self.cfg.family in ("encdec", "vlm"):
+            frames = np.zeros((B, P, self.cfg.d_model), np.float32)
+        logits, cache = self._prefill(jnp.asarray(toks), None if frames is None else jnp.asarray(frames), max_len)
+        key = jax.random.PRNGKey(self.sc.seed)
+        lg = logits[:, -1].astype(jnp.float32)
+        cur = (jnp.argmax(lg, axis=-1) if self.sc.temperature == 0 else
+               jax.random.categorical(key, lg / max(self.sc.temperature, 1e-6), axis=-1)).astype(jnp.int32)[:, None]
+        outs = [np.asarray(cur)]
+        for t in range(self.sc.max_new - 1):
+            key, sub = jax.random.split(key)
+            cur, cache = self._step(cur, cache, jnp.int32(P + t), sub)
+            outs.append(np.asarray(cur))
+        gen = np.concatenate(outs, axis=1)
+        return [gen[i] for i in range(B)]

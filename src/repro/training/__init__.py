@@ -1,0 +1,3 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.steps import TrainOptions, init_train_state, make_train_step
+from repro.training.trainer import StragglerMonitor, Trainer, TrainerConfig

@@ -1,0 +1,75 @@
+"""AdamW + schedules, dependency-free (no optax in the image)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - c.warmup_steps) / jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return c.lr * warm * (c.min_lr_frac + (1 - c.min_lr_frac) * cos)
+
+
+def adamw_init(params) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p, dtype=F32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(c: AdamWConfig, grads, opt, params):
+    """One AdamW step; returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gn, 1e-9)) if c.grad_clip else 1.0
+    lr = schedule(c, step)
+    b1c = 1 - c.b1 ** step.astype(F32)
+    b2c = 1 - c.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * clip
+        m2 = c.b1 * m + (1 - c.b1) * g
+        v2 = c.b2 * v + (1 - c.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        step_dir = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * step_dir).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,46 @@
+"""Shared fixtures: small synthetic read sets + encoded SAGe files.
+
+NOTE: no XLA_FLAGS manipulation here — smoke tests and benches must see the
+real single-CPU device; only launch/dryrun.py forces 512 placeholder devices
+(in its own process).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.encoder import SageEncoder
+from repro.genomics.synth import make_reference, sample_read_set
+
+
+@pytest.fixture(scope="session")
+def reference():
+    return make_reference(60_000, seed=3)
+
+
+@pytest.fixture(scope="session", params=["illumina", "ont", "hifi"])
+def readset(request, reference):
+    prof = request.param
+    kw = dict(
+        illumina=dict(depth=4, max_reads=None, seed=11),
+        ont=dict(depth=2, max_reads=14, seed=11),
+        hifi=dict(depth=1, max_reads=6, seed=11),
+    )[prof]
+    return sample_read_set(reference, prof, **kw)
+
+
+@pytest.fixture(scope="session")
+def encoded(readset, reference):
+    enc = SageEncoder(reference, token_target=8192)
+    sf = enc.encode(readset)
+    return readset, sf, enc
+
+
+@pytest.fixture(scope="session")
+def illumina_encoded(reference):
+    rs = sample_read_set(reference, "illumina", depth=3, seed=5)
+    enc = SageEncoder(reference, token_target=8192)
+    return rs, enc.encode(rs)
+
+
+def multiset(reads):
+    return sorted(bytes(np.asarray(r, dtype=np.uint8)) for r in reads)

@@ -1,0 +1,76 @@
+"""Property tests for the bit-packing substrate."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitio import (
+    BitWriter,
+    pack_2bit,
+    pack_bits,
+    unpack_2bit,
+    unpack_bits,
+    unpack_fields,
+)
+
+
+@st.composite
+def fields(draw):
+    n = draw(st.integers(1, 200))
+    widths = draw(st.lists(st.integers(0, 32), min_size=n, max_size=n))
+    vals = [draw(st.integers(0, (1 << w) - 1)) if w else 0 for w in widths]
+    return np.asarray(vals, dtype=np.uint64), np.asarray(widths, dtype=np.int64)
+
+
+@given(fields())
+@settings(max_examples=80, deadline=None)
+def test_pack_unpack_roundtrip(fv):
+    vals, widths = fv
+    words, total = pack_bits(vals.copy(), widths)
+    assert total == int(widths.sum())
+    ends = np.cumsum(widths)
+    got = unpack_fields(words, ends - widths, widths)
+    assert np.array_equal(got, vals)
+
+
+@given(fields())
+@settings(max_examples=40, deadline=None)
+def test_bitwriter_matches_pack_bits(fv):
+    vals, widths = fv
+    bw = BitWriter()
+    for v, w in zip(vals, widths):
+        bw.write(int(v), int(w))
+    words, total = pack_bits(vals.copy(), widths)
+    assert bw.nbits == total
+    got = bw.getvalue()
+    assert np.array_equal(got[: words.size], words)
+
+
+def test_write_unary():
+    bw = BitWriter()
+    for cls in (0, 1, 2, 3, 7):
+        bw.write_unary(cls)
+    bits = unpack_bits(bw.getvalue(), bw.nbits)
+    # decode unary back
+    out, run = [], 0
+    for b in bits:
+        if b:
+            run += 1
+        else:
+            out.append(run)
+            run = 0
+    assert out == [0, 1, 2, 3, 7]
+
+
+@given(st.lists(st.integers(0, 3), min_size=0, max_size=500))
+@settings(max_examples=40, deadline=None)
+def test_2bit_roundtrip(codes):
+    c = np.asarray(codes, dtype=np.uint8)
+    assert np.array_equal(unpack_2bit(pack_2bit(c), c.size), c)
+
+
+def test_value_too_wide_raises():
+    bw = BitWriter()
+    with pytest.raises(ValueError):
+        bw.write(4, 2)

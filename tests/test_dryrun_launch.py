@@ -1,0 +1,48 @@
+"""Launch-layer integration: a real (reduced-cost) dryrun cell in a
+subprocess with 512 forced host devices, validating the artifact contract
+(deliverables e & g end-to-end)."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = str(Path(__file__).resolve().parent.parent)
+
+
+def test_dryrun_cell_produces_roofline_artifact(tmp_path):
+    env = dict(os.environ, PYTHONPATH=f"{ROOT}/src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2-1.5b", "--shape", "train_4k", "--mesh", "single",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    art = json.loads((tmp_path / "qwen2-1.5b_train_4k_pod1.json").read_text())
+    assert art["status"] == "ok"
+    assert art["chips"] == 256
+    # roofline contract
+    for k in ("t_compute", "t_memory", "t_collective", "hlo_flops_dev",
+              "collective_bytes_dev", "peak_hbm_gb", "roofline_frac"):
+        assert k in art and art[k] >= 0
+    assert art["bottleneck"] in ("compute", "memory", "collective")
+    # useful flops must be a sane fraction of HLO flops (remat <= ~3x waste)
+    assert 0.2 < art["useful_flops_frac"] <= 1.2
+    # the production train config must fit a v5e
+    assert art["peak_hbm_gb"] < 16.0
+
+
+def test_dryrun_skip_contract(tmp_path):
+    env = dict(os.environ, PYTHONPATH=f"{ROOT}/src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "yi-34b", "--shape", "long_500k", "--mesh", "single",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    art = json.loads((tmp_path / "yi-34b_long_500k_pod1.json").read_text())
+    assert art["status"] == "skipped"
+    assert "sub-quadratic" in art["reason"]

@@ -1,0 +1,64 @@
+"""GenStore-style ISF filter: exact-match pruning + Myers bit-vector bound."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitio import unpack_2bit
+from repro.core.decode_jax import decode_file_jax, prepare_device_blocks
+from repro.genomics.filter_jax import exact_match_mask, filter_block, myers_distance
+
+
+def _lev(a, b):
+    """Semi-global edit distance (read fully consumed, free text ends)."""
+    import numpy as np
+    D = np.zeros((len(a) + 1, len(b) + 1), int)
+    D[:, 0] = np.arange(len(a) + 1)
+    for i in range(1, len(a) + 1):
+        for j in range(1, len(b) + 1):
+            D[i, j] = min(D[i-1, j-1] + (a[i-1] != b[j-1]), D[i-1, j] + 1, D[i, j-1] + 1)
+    return D[len(a)].min()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_myers_matches_dp(seed):
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(0, 4, 20).astype(np.int32)
+    txt = rng.integers(0, 4, 40).astype(np.int32)
+    # plant a noisy copy of pat inside txt
+    txt[8:28] = pat
+    txt[12] = (txt[12] + 1) % 4
+    got = int(myers_distance(jnp.asarray(pat), jnp.int32(20), jnp.asarray(txt), jnp.int32(40)))
+    exp = _lev(list(pat), list(txt))
+    assert got == exp
+
+
+def test_filter_prunes_exact_reads(illumina_encoded):
+    rs, sf = illumina_encoded
+    db = prepare_device_blocks(sf)
+    out = decode_file_jax(db)
+    import jax
+
+    out = jax.tree.map(np.asarray, out)
+    total = pruned = 0
+    from repro.core.format import D as DIRF
+
+    for bi in range(min(db.n_blocks, 6)):
+        cons_w = unpack_2bit(db.arrays["cons"][bi], db.caps.window).astype(np.int8)
+        cons_start = int(db.arrays["dir"][bi][DIRF["cons_start"]])
+        dec = {k: jnp.asarray(v[bi]) for k, v in out.items()}
+        # decode reports GLOBAL positions; the filter works block-locally
+        dec["read_pos"] = jnp.where(dec["read_pos"] >= 0, dec["read_pos"] - cons_start, -1)
+        mask, n = filter_block(dec, jnp.asarray(cons_w))
+        mask = np.asarray(mask)
+        total += int(out["n_reads"][bi])
+        pruned += int(n)
+        # every pruned read must REALLY be an exact forward match
+        for r in np.nonzero(mask)[0]:
+            s, l = int(out["read_start"][bi][r]), int(out["read_len"][bi][r])
+            p = int(out["read_pos"][bi][r]) - cons_start
+            seq = out["tokens"][bi][s : s + l]
+            assert p >= 0
+            np.testing.assert_array_equal(seq, cons_w[p : p + l])
+    # rev-strand reads and donor-SNP carriers legitimately fall through
+    assert pruned > 0.2 * total, f"filter should prune many exact reads ({pruned}/{total})"

@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle vs
+(for sage_decode) the sequential numpy decoder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import refdec
+from repro.core.decode_jax import prepare_device_blocks
+from repro.core.encoder import SageEncoder
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.kernels import ops
+from repro.kernels import ref as REF
+
+from conftest import multiset
+
+
+# ---------------------------------------------------------------- sage_decode
+def test_sage_decode_kernel_matches_oracle(encoded):
+    rs, sf, _ = encoded
+    db = prepare_device_blocks(sf)
+    out_k = jax.tree.map(np.asarray, ops.sage_decode(db, use_pallas=True))
+    out_r = jax.tree.map(np.asarray, ops.sage_decode(db, use_pallas=False))
+    for key in out_k:
+        np.testing.assert_array_equal(out_k[key], out_r[key], err_msg=key)
+    # and against the original reads (end-to-end losslessness via the kernel)
+    got = []
+    for bi in range(db.n_blocks):
+        toks = out_k["tokens"][bi]
+        nr = int(sf.directory[bi, 1])  # n_reads
+        for r in range(nr):
+            st = int(out_k["read_start"][bi][r])
+            ln = int(out_k["read_len"][bi][r])
+            got.append(toks[st : st + ln].astype(np.uint8))
+    assert multiset(got) == multiset(rs.reads)
+
+
+# ------------------------------------------------------------------- reformat
+@pytest.mark.parametrize("k", [3, 4, 7, 8])
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
+def test_kmer_kernel_sweep(k, dtype):
+    rng = np.random.default_rng(k)
+    toks = rng.integers(0, 5, (3, 1024)).astype(np.int8)  # includes PAD/N=4
+    t = jnp.asarray(toks, dtype)
+    out_k = np.asarray(ops.kmer_tokens(t, k, use_pallas=True))
+    out_r = np.asarray(ops.kmer_tokens(t, k, use_pallas=False))
+    np.testing.assert_array_equal(out_k, out_r)
+
+
+@pytest.mark.parametrize("shape", [(1, 64), (4, 1024), (2, 4096)])
+def test_one_hot_kernel_sweep(shape):
+    rng = np.random.default_rng(shape[1])
+    toks = jnp.asarray(rng.integers(0, 5, shape), jnp.int8)
+    out_k = np.asarray(ops.one_hot(toks, use_pallas=True), np.float32)
+    out_r = np.asarray(ops.one_hot(toks, use_pallas=False), np.float32)
+    np.testing.assert_array_equal(out_k, out_r)
+    assert out_k.shape == shape + (4,)
+
+
+# ------------------------------------------------------------------ ssd_chunk
+@pytest.mark.parametrize("shape", [
+    # (B, S, H, P, N, chunk)
+    (2, 64, 4, 16, 16, 16),
+    (1, 128, 8, 32, 32, 32),
+    (2, 96, 2, 64, 64, 32),  # S not divisible by chunk (pads)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_sweep(shape, dtype):
+    B, S, H, P, N, chunk = shape
+    key = jax.random.PRNGKey(S + P)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, S, H, N), jnp.float32) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, H, N), jnp.float32) * 0.3
+    y_k, st_k = ops.ssd(x, dt, A, B_, C_, chunk, use_pallas=True)
+    y_r, st_r = ops.ssd(x, dt, A, B_, C_, chunk, use_pallas=False)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32), np.asarray(y_r, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_with_initial_state():
+    B, S, H, P, N, chunk = 1, 64, 4, 16, 16, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    C_ = jax.random.normal(ks[4], (B, S, H, N)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.1
+    y_k, st_k = ops.ssd(x, dt, A, B_, C_, chunk, state0=s0, use_pallas=True)
+    y_r, st_r = ops.ssd(x, dt, A, B_, C_, chunk, state0=s0, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), rtol=1e-5, atol=1e-5)

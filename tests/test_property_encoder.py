@@ -1,0 +1,98 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.encoder import SageEncoder
+from repro.core import refdec
+from repro.genomics.synth import ReadSet, make_reference
+
+from conftest import multiset
+
+
+@st.composite
+def perturbed_reads(draw):
+    """Reads derived from a shared reference by random edits + strand flips,
+    plus occasional unmappable junk — the encoder must stay lossless on ALL
+    of it (mapped, chimeric-ish, escaped)."""
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    ref = make_reference(4000, seed=seed % 7)
+    n = draw(st.integers(3, 12))
+    reads = []
+    for _ in range(n):
+        kind = rng.random()
+        L = int(rng.integers(60, 200))
+        if kind < 0.1:  # junk (unmappable -> escape path)
+            reads.append(rng.integers(0, 5, L).astype(np.uint8))
+            continue
+        pos = int(rng.integers(0, ref.size - L))
+        r = ref[pos : pos + L].copy()
+        nmut = int(rng.integers(0, 6))
+        for _ in range(nmut):
+            at = int(rng.integers(0, r.size))
+            op = rng.random()
+            if op < 0.6:
+                r[at] = (r[at] + int(rng.integers(1, 4))) % 4
+            elif op < 0.8:
+                ins = rng.integers(0, 4, int(rng.integers(1, 4))).astype(np.uint8)
+                r = np.concatenate([r[:at], ins, r[at:]])
+            else:
+                r = np.concatenate([r[:at], r[at + 1 :]])
+        if r.size < 30:
+            continue
+        if rng.random() < 0.5:
+            from repro.genomics.synth import revcomp
+
+            r = revcomp(r)
+        reads.append(r.astype(np.uint8))
+    quals = [np.full(r.size, 60, np.uint8) for r in reads]
+    return ref, ReadSet(reads=reads, quals=quals, kind="short", profile="prop")
+
+
+@given(perturbed_reads())
+@settings(max_examples=12, deadline=None, suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+def test_encoder_lossless_on_arbitrary_edits(data):
+    ref, rs = data
+    if rs.n_reads == 0:
+        return
+    sf = SageEncoder(ref, token_target=4096).encode(rs)
+    dec = refdec.decode_all(sf)
+    assert multiset(d.seq for d in dec) == multiset(rs.reads)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_opt_levels_monotone_nonincreasing(seed):
+    """Each paper optimization (Fig.17) may only shrink the streams."""
+    from repro.genomics.synth import sample_read_set
+
+    ref = make_reference(6000, seed=seed % 5)
+    rs = sample_read_set(ref, "illumina", depth=2, seed=seed)
+    enc = SageEncoder(ref, token_target=4096)
+    sizes = []
+    for lvl in range(5):
+        sf = enc.encode(rs, opt_level=lvl)
+        sizes.append(sum(v.nbytes for v in sf.streams.values()))
+    for a, b in zip(sizes, sizes[1:]):
+        assert b <= a + 64, f"opt level increased size: {sizes}"
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_block_independence(seed):
+    """Decoding any single block in isolation must reproduce exactly the
+    reads the directory assigns to it (the paper's per-channel independence
+    property — the basis for sharding, restart, and the Pallas grid)."""
+    from repro.genomics.synth import sample_read_set
+    from repro.core.bitio import unpack_2bit
+
+    ref = make_reference(8000, seed=seed % 3)
+    rs = sample_read_set(ref, "illumina", depth=2, seed=seed)
+    sf = SageEncoder(ref, token_target=2048).encode(rs)
+    cons = unpack_2bit(sf.consensus2b, sf.meta.cons_len)
+    per_block = [refdec.decode_block(sf, bi, cons) for bi in range(sf.meta.n_blocks)]
+    assert sum(len(p) for p in per_block) == rs.n_reads
+    joined = [d.seq for p in per_block for d in p]
+    assert multiset(joined) == multiset(rs.reads)

@@ -1,0 +1,47 @@
+"""Tests for dataset-adaptive bit-width class tuning."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tuning import assign_classes, bitlen, tune_classes
+
+
+@given(st.lists(st.integers(0, 2**40), min_size=1, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_bitlen_matches_python(vals):
+    v = np.asarray(vals, dtype=np.uint64)
+    got = bitlen(v)
+    exp = np.asarray([x.bit_length() for x in vals])
+    assert np.array_equal(got, exp)
+
+
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_classes_cover_all_values(vals):
+    v = np.asarray(vals, dtype=np.uint64)
+    widths = tune_classes(v)
+    cls = assign_classes(v, widths)
+    w = np.asarray(widths)[cls]
+    assert np.all(w >= bitlen(v)), "assigned width must fit the value"
+
+
+def test_skewed_distribution_prefers_small_widths():
+    # paper Fig 6a: heavily skewed -> small widths get the cheap guide codes
+    rng = np.random.default_rng(0)
+    small = rng.integers(0, 2, 10_000)  # 1-bit values
+    big = rng.integers(1 << 10, 1 << 12, 100)  # 12-bit values
+    v = np.concatenate([small, big]).astype(np.uint64)
+    widths = tune_classes(v)
+    assert widths[0] <= 2, f"most frequent class should be narrow, got {widths}"
+    # and total cost must beat fixed-width encoding
+    cls = assign_classes(v, widths)
+    cost = int(np.sum(cls + 1 + np.asarray(widths)[cls]))
+    fixed = v.size * 12
+    assert cost < fixed
+
+
+def test_single_value_degenerate():
+    widths = tune_classes(np.zeros(10, dtype=np.uint64))
+    cls = assign_classes(np.zeros(10, dtype=np.uint64), widths)
+    assert np.all(np.asarray(widths)[cls] >= 0)

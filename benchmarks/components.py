@@ -24,7 +24,7 @@ import jax
 import numpy as np
 
 from benchmarks.datasets import load
-from repro.core.decode_jax import decode_file_jax, prepare_device_blocks
+from repro.core.store import SageStore
 
 ART = Path(__file__).parent / "artifacts"
 
@@ -69,13 +69,15 @@ def measure(label: str, force: bool = False) -> Measured:
     t_lz = time.perf_counter() - t0
     # spring decode = LZMA pass + a reconstruction pass (~sage-sw cost)
     ratio_spring = n_bases / (len(scomp) + sf.directory.nbytes)
-    # --- sage software decode (vectorized JAX on CPU) ---
-    db = prepare_device_blocks(sf)
-    out = decode_file_jax(db)
-    jax.block_until_ready(out["tokens"])  # compile
+    # --- sage software decode (vectorized JAX on CPU, via the store API) ---
+    store = SageStore()
+    store.register(label, sf)
+    session = store.session()
+    out = session.read(label)  # whole-file SAGe_Read (prepares + compiles)
+    jax.block_until_ready(out["tokens"])
     t0 = time.perf_counter()
     for _ in range(3):
-        out = decode_file_jax(db)
+        out = session.read(label)
         jax.block_until_ready(out["tokens"])
     t_sage = (time.perf_counter() - t0) / 3
     thr_sage = n_bases / t_sage

@@ -13,7 +13,7 @@ from pathlib import Path
 
 from repro.core.encoder import SageEncoder
 from repro.core.format import SageFile
-from repro.genomics.synth import ReadSet, make_reference, sample_read_set
+from repro.genomics.synth import make_reference, sample_read_set
 
 ART = Path(__file__).parent / "artifacts" / "datasets"
 

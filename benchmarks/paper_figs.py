@@ -9,9 +9,6 @@ benchmarks.pipesim (the paper's pipelined-stage model).
 
 from __future__ import annotations
 
-import dataclasses
-import time
-
 import numpy as np
 
 from benchmarks import components, datasets
@@ -23,7 +20,6 @@ from benchmarks.constants import (
     CHANNEL_BW,
     ETH_BW,
     IB_BW,
-    MAPPER_BASES_S,
     P_CPU_ACTIVE,
     P_CPU_IDLE,
     P_DRAM,
@@ -187,10 +183,12 @@ def fig17_rows() -> list[tuple]:
 def tab02_rows() -> list[tuple]:
     """TPU analogue of the area/power table: SAGe decode kernel resource
     profile — VMEM working set per block + measured decode rates."""
-    from repro.core.decode_jax import prepare_device_blocks
+    from repro.core.store import SageStore
 
     _, _, rs, sf = datasets.load("RS2")
-    db = prepare_device_blocks(sf)
+    store = SageStore()
+    store.register("RS2", sf)
+    db = store.prepared("RS2")
     caps = db.caps
     stream_bytes = sum(v.shape[1] * 4 for k, v in db.arrays.items() if k not in ("dir",))
     temps = 24 * caps.tokens * 4  # ~24 int32 C-length temporaries

@@ -65,3 +65,35 @@ def throughput(s: Scenario) -> float:
 
 def speedup(s: Scenario, baseline: Scenario) -> float:
     return throughput(s) / throughput(baseline)
+
+
+# ------------------------------------------------------------------ measured
+def measure_store_read(session, name: str, n_bases: int, repeats: int = 3) -> float:
+    """Measured SAGe_Read throughput (uncompressed bases/s) of a stored
+    dataset through a :class:`repro.core.store.SageReadSession` — the live
+    counterpart of a Scenario's ``decomp`` stage."""
+    import time
+
+    import jax
+
+    jax.block_until_ready(session.read(name)["tokens"])  # prepare + compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(session.read(name)["tokens"])
+    return repeats * n_bases / (time.perf_counter() - t0)
+
+
+def scenario_from_store(
+    session,
+    name: str,
+    n_bases: int,
+    *,
+    ratio: float,
+    repeats: int = 3,
+    **scenario_kwargs,
+) -> Scenario:
+    """Build a Scenario whose decompression stage is the *measured* store
+    read path (SGSW-style software decode), composable with the analytic
+    I/O / mapper stages."""
+    thr = measure_store_read(session, name, n_bases, repeats=repeats)
+    return Scenario(ratio=ratio, decomp_bases_s=thr, **scenario_kwargs)

@@ -1,5 +1,6 @@
-"""Quickstart: compress a read set with SAGe, decode it on-device, verify
-losslessness, and compare ratios against general-purpose compression.
+"""Quickstart: compress a read set with SAGe, decode it on-device through a
+SageStore session, verify losslessness, and compare ratios against
+general-purpose compression.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,8 +14,7 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
-from repro.core import OutputFormat, sage_read, sage_write
-from repro.core.decode_jax import prepare_device_blocks
+from repro.core import SageStore
 from repro.genomics.synth import make_reference, sample_read_set
 
 
@@ -25,28 +25,37 @@ def main() -> None:
     raw = sum(r.size for r in rs.reads)
     print(f"read set: {rs.n_reads} reads, {raw/1e6:.2f} Mbases")
 
+    store = SageStore()
     t0 = time.time()
-    sf = sage_write(rs, ref, token_target=16384)  # SAGe_Write
+    sf = store.write("quickstart", rs, ref, token_target=16384)  # SAGe_Write
     comp = sf.compressed_bytes(include_consensus=False)
     gz = len(zlib.compress(b"".join(r.tobytes() for r in rs.reads), 9))
     print(f"compressed in {time.time()-t0:.1f}s -> {comp/1e3:.1f} KB "
           f"({raw/comp:.1f}x vs sequence bytes; zlib-9: {raw/gz:.1f}x)")
 
-    db = prepare_device_blocks(sf)
+    session = store.session()
     t0 = time.time()
-    out = sage_read(db, fmt=OutputFormat.KMER, kmer_k=4)  # SAGe_Read
+    out = session.read("quickstart", fmt="kmer", kmer_k=4)  # SAGe_Read
     jax.block_until_ready(out["tokens"])
     t_c = time.time() - t0
     t0 = time.time()
-    out = sage_read(db, fmt=OutputFormat.KMER, kmer_k=4)
+    out = session.read("quickstart", fmt="kmer", kmer_k=4)
     jax.block_until_ready(out["tokens"])
     print(f"device decode: {raw/1e6/(time.time()-t0):.0f} Mbases/s "
           f"(first call incl. compile: {t_c:.2f}s)")
 
+    # a ranged SAGe_Read returns exactly the whole-file slice
+    nb = store.n_blocks("quickstart")
+    part = session.read("quickstart", (1, min(3, nb)))
+    np.testing.assert_array_equal(
+        np.asarray(part["tokens"]), np.asarray(out["tokens"])[1 : min(3, nb)]
+    )
+    print(f"ranged read (1, {min(3, nb)}) matches whole-file decode")
+
     # verify losslessness
     toks = np.asarray(out["tokens"])
     got = []
-    for bi in range(db.n_blocks):
+    for bi in range(nb):
         for r in range(int(np.asarray(out["n_reads"])[bi])):
             st = int(np.asarray(out["read_start"])[bi][r])
             ln = int(np.asarray(out["read_len"])[bi][r])

@@ -1,6 +1,7 @@
 """End-to-end genome analysis: SAGe-prepared reads -> in-framework read
-mapper (the paper's integration scenario: decompression feeds an analysis
-accelerator, with an in-storage-filter-style exact-match pruning stage).
+mapper through the store's SAGe_ISP stream (the paper's integration
+scenario: decompression feeds an analysis accelerator, with an
+in-storage-filter-style exact-match pruning stage).
 
   PYTHONPATH=src python examples/read_mapping.py
 """
@@ -10,56 +11,34 @@ import time
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core import sage_read, sage_write
-from repro.core.decode_jax import prepare_device_blocks
-from repro.genomics.mapper import ReadMapper
-from repro.genomics.synth import make_reference, revcomp, sample_read_set
+from repro.core import SageStore
+from repro.genomics.mapper import map_store_reads
+from repro.genomics.synth import make_reference, sample_read_set
 
 
 def main() -> None:
     print("=== SAGe -> read-mapping pipeline ===")
     ref = make_reference(60_000, seed=21)
     rs = sample_read_set(ref, "illumina", depth=3, seed=22)
-    sf = sage_write(rs, ref, token_target=16384)
-    db = prepare_device_blocks(sf)
+    store = SageStore()
+    store.write("mapping", rs, ref, token_target=16384)  # SAGe_Write
+    session = store.session()
 
     t0 = time.time()
-    out = sage_read(db)
-    toks = np.asarray(out["tokens"])
-    n_reads = np.asarray(out["n_reads"])
-    starts = np.asarray(out["read_start"])
-    lens = np.asarray(out["read_len"])
-    poss = np.asarray(out["read_pos"])
-    revs = np.asarray(out["read_rev"])
-    print(f"decoded {int(n_reads.sum())} reads in {time.time()-t0:.2f}s")
+    out = session.read("mapping")  # whole-file SAGe_Read (warms the decoder)
+    n_decoded = int(out["n_reads"].sum())
+    print(f"decoded {n_decoded} reads in {time.time()-t0:.2f}s")
 
-    # GenStore-EM-style filter: reads whose decode already carries an exact
-    # match position (zero mismatches) skip the expensive mapper
-    mapper = ReadMapper(ref)
+    # SAGe_ISP: stream decoded blocks into the mapper; reads whose decode
+    # already carries an exact match position skip the expensive mapper
+    # (GenStore-EM-style pruning)
     t0 = time.time()
-    mapped = filtered = fell_through = 0
-    for bi in range(db.n_blocks):
-        for r in range(int(n_reads[bi])):
-            seq = toks[bi, starts[bi, r] : starts[bi, r] + lens[bi, r]].astype(np.uint8)
-            pos = int(poss[bi, r])
-            if pos >= 0:
-                cand = ref[pos : pos + seq.size]
-                fwd = revcomp(seq) if revs[bi, r] else seq
-                if cand.size == fwd.size and np.array_equal(cand, fwd):
-                    filtered += 1  # exact match: pruned before the accelerator
-                    continue
-            segs = mapper.map_read(seq)
-            if segs is not None:
-                mapped += 1
-            else:
-                fell_through += 1
+    rep = map_store_reads(session, "mapping", ref, blocks_per_fetch=1)
     dt = time.time() - t0
-    total = filtered + mapped + fell_through
-    print(f"filter pruned {filtered}/{total} reads ({filtered/total:.0%}) — "
-          f"mapper handled {mapped}, unmapped {fell_through}, in {dt:.1f}s")
-    assert filtered + mapped > 0.9 * total
+    print(f"filter pruned {rep.pruned}/{rep.total} reads ({rep.pruned/rep.total:.0%}) — "
+          f"mapper handled {rep.mapped}, unmapped {rep.unmapped}, in {dt:.1f}s")
+    assert rep.total == n_decoded
+    assert rep.pruned + rep.mapped > 0.9 * rep.total
 
 
 if __name__ == "__main__":

@@ -1,8 +1,8 @@
 """Batched serving: SAGe-decoded reads as prompts -> prefill + decode loop.
 
-The paper's SAGe_Read/SAGe_ISP contract: decoded reads flow straight into
-the analysis system — here a genomic LM continuation service (e.g. scoring
-or imputing read extensions).
+The paper's SAGe_Read/SAGe_ISP contract: decoded reads flow straight from
+the store into the analysis system — here a genomic LM continuation service
+(e.g. scoring or imputing read extensions) fed by ``prompts_from_store``.
 
   PYTHONPATH=src python examples/serve_genomic_lm.py
 """
@@ -13,14 +13,12 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
-from repro.core import OutputFormat, sage_read, sage_write
-from repro.core.decode_jax import prepare_device_blocks
+from repro.core import SageStore
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.models import lm
-from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.engine import ServeConfig, ServingEngine, prompts_from_store
 
 
 def main() -> None:
@@ -30,19 +28,15 @@ def main() -> None:
 
     ref = make_reference(30_000, seed=31)
     rs = sample_read_set(ref, "illumina", depth=1, seed=32, max_reads=64)
-    sf = sage_write(rs, ref, token_target=8192)
-    db = prepare_device_blocks(sf)
-    out = sage_read(db, fmt=OutputFormat.KMER, kmer_k=3)
-    km = np.asarray(out["kmer"])  # (nb, C//k)
+    store = SageStore()
+    store.write("serve", rs, ref, token_target=8192)  # SAGe_Write
+    session = store.session()
 
-    # first 8 reads' token prefixes as prompts
-    starts = np.asarray(out["read_start"])
-    lens = np.asarray(out["read_len"])
-    prompts = []
-    k = 3
-    for r in range(min(8, int(np.asarray(out["n_reads"])[0]))):
-        s, l = int(starts[0, r]) // k, int(lens[0, r]) // k
-        prompts.append(km[0, s : s + min(l, 48)].astype(np.int32) % cfg.vocab)
+    # first reads' k-mer token prefixes as prompts (SAGe_Read -> serving)
+    prompts = prompts_from_store(
+        session, "serve", vocab=cfg.vocab, n_prompts=8, max_prompt=48, kmer_k=3,
+        block_range=(0, 1),
+    )
 
     t0 = time.time()
     outs = eng.generate(prompts)

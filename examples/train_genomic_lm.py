@@ -18,7 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.encoder import SageEncoder
+from repro.core import SageStore
 from repro.data.pipeline import SageTokenPipeline
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.training.optimizer import AdamWConfig
@@ -54,8 +54,9 @@ def main() -> None:
     # per epoch and measurably learns it within a few hundred CPU steps
     ref = make_reference(24_000, seed=1)
     rs = sample_read_set(ref, "illumina", depth=10, seed=2)
-    sf = SageEncoder(ref, token_target=16384).encode(rs)
-    pipe = SageTokenPipeline(sf, cfg.vocab, args.batch, args.seq)
+    store = SageStore()
+    sf = store.write("train", rs, ref, token_target=16384)  # SAGe_Write
+    pipe = SageTokenPipeline("train", cfg.vocab, args.batch, args.seq, store=store)
     ratio = rs.n_bases / sf.compressed_bytes(include_consensus=False)
     print(f"data: {rs.n_bases/1e6:.1f} Mbases, SAGe ratio {ratio:.1f}x, k={pipe.k}")
 

@@ -1,16 +1,23 @@
 """SAGe core: the paper's contribution — compression algorithm, container
-format, and data-parallel decoders — as a composable JAX module."""
+format, data-parallel decoders, and the session-based streaming store — as a
+composable JAX module."""
 
 from repro.core.api import (
+    FormatSpec,
     OutputFormat,
+    apply_format,
+    available_formats,
+    get_format,
     kmer_pack,
     kmer_special_ids,
     kmer_vocab_size,
     one_hot_bases,
     pick_k,
+    register_format,
     sage_read,
     sage_write,
 )
 from repro.core.decode_jax import PAD_BASE, DeviceBlocks, decode_file_jax, prepare_device_blocks
 from repro.core.encoder import SageEncoder
 from repro.core.format import BlockCaps, SageFile, SageMeta
+from repro.core.store import SageReadSession, SageStore, StreamBatch, slice_device_blocks

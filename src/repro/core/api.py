@@ -1,20 +1,27 @@
-"""SAGe interface commands (§5.3 analogue).
+"""SAGe interface commands (§5.3 analogue) + the output-format registry.
 
-The paper exposes three NVMe commands; our TPU framework exposes them as an
-API over the container + device decoders:
+The paper exposes three NVMe commands; our TPU framework exposes them as a
+session-based streaming API (:mod:`repro.core.store`):
 
-  SAGe_Write -> :func:`sage_write`   compress a read set (host)
-  SAGe_Read  -> :func:`sage_read`    decode to the accelerator's desired
-                format: 2-bit tokens, one-hot, or k-mer LM tokens
-  SAGe_ISP   -> the ``consumer`` argument: decoded blocks are handed either
-                to an in-framework analysis stage (read mapper / filter) or
-                to the training/serving data pipeline
+  SAGe_Write -> ``SageStore.write`` / ``SageReadSession.write``
+  SAGe_Read  -> ``SageReadSession.read(name, block_range, fmt)`` — ranged,
+                batched decode to any registered :class:`FormatSpec`
+  SAGe_ISP   -> ``SageReadSession.read_stream(name, consumer)`` — decoded
+                blocks are handed to an analysis-side consumer as soon as
+                they are ready (mapper / filter / LM pipeline / serving)
+
+This module holds the pieces that are *format math*, the pluggable
+:class:`FormatSpec` registry, and the one-shot ``sage_write``/``sage_read``
+convenience wrappers. Multi-dataset state, ranged reads, and streaming live
+in :class:`repro.core.store.SageStore`; all consumers outside ``core/`` go
+through the store, never through the raw decoders.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import enum
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +34,9 @@ from repro.genomics.synth import ReadSet
 
 
 class OutputFormat(enum.Enum):
+    """Legacy closed enum — retained as an alias set over the open
+    :class:`FormatSpec` registry (``get_format`` accepts either)."""
+
     TOKENS_2BIT = "2bit"  # int8 base codes 0..3 (PAD_BASE padding)
     ONE_HOT = "onehot"  # (.., 4) bfloat16 one-hot (paper cites [106])
     KMER = "kmer"  # packed k-mer LM token ids (maps onto arch vocabs)
@@ -73,7 +83,91 @@ def one_hot_bases(tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
     return (t[..., None] == jnp.arange(4, dtype=jnp.int32)).astype(dtype)
 
 
-# -- commands ---------------------------------------------------------------
+# -- output-format registry -------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """One SAGe_Read output format.
+
+    ``apply(tokens, *, kmer_k, use_pallas, interpret)`` converts decoded base
+    tokens into the format's array; ``None`` means the raw 2-bit tokens are
+    already the answer. New formats register via :func:`register_format`."""
+
+    name: str  # registry key (the ``fmt=`` string)
+    out_key: str  # key the formatted array appears under in the read result
+    apply: Optional[Callable[..., jax.Array]] = None
+    requires_k: bool = False
+    doc: str = ""
+
+
+def _apply_one_hot(tokens, *, kmer_k=None, use_pallas=False, interpret=True):
+    if use_pallas:
+        from repro.kernels.reformat import one_hot_pallas
+
+        return one_hot_pallas(tokens, interpret=interpret)
+    return one_hot_bases(tokens)
+
+
+def _apply_kmer(tokens, *, kmer_k, use_pallas=False, interpret=True):
+    if use_pallas:
+        from repro.kernels.reformat import kmer_pack_pallas
+
+        return kmer_pack_pallas(tokens, kmer_k, interpret=interpret)
+    return kmer_pack(tokens, kmer_k)
+
+
+_FORMATS: dict[str, FormatSpec] = {}
+
+
+def register_format(spec: FormatSpec) -> FormatSpec:
+    """Register (or replace) an output format; returns the spec."""
+    _FORMATS[spec.name] = spec
+    return spec
+
+
+def available_formats() -> tuple[str, ...]:
+    return tuple(sorted(_FORMATS))
+
+
+def get_format(fmt) -> FormatSpec:
+    """Resolve ``fmt`` — a registry name, :class:`FormatSpec`, or legacy
+    :class:`OutputFormat` member — to its spec."""
+    if isinstance(fmt, FormatSpec):
+        return fmt
+    key = fmt.value if isinstance(fmt, OutputFormat) else str(fmt)
+    if key not in _FORMATS:
+        raise KeyError(f"unknown output format {key!r}; registered: {available_formats()}")
+    return _FORMATS[key]
+
+
+def apply_format(
+    out: dict[str, jax.Array],
+    fmt,
+    *,
+    kmer_k: Optional[int] = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    context: str = "sage_read",
+) -> dict[str, jax.Array]:
+    """Attach ``fmt``'s array to a decode result dict (in place) and return it."""
+    spec = get_format(fmt)
+    if spec.requires_k and kmer_k is None:
+        raise ValueError(
+            f"{context}: format {spec.name!r} requires kmer_k "
+            f"(registered formats: {available_formats()})"
+        )
+    if spec.apply is not None:
+        out[spec.out_key] = spec.apply(
+            out["tokens"], kmer_k=kmer_k, use_pallas=use_pallas, interpret=interpret
+        )
+    return out
+
+
+register_format(FormatSpec("2bit", "tokens", None, doc="int8 base codes 0..3, PAD=4"))
+register_format(FormatSpec("onehot", "onehot", _apply_one_hot, doc="(.., C, 4) bf16 one-hot"))
+register_format(FormatSpec("kmer", "kmer", _apply_kmer, requires_k=True, doc="packed k-mer LM ids"))
+
+
+# -- one-shot commands (compat wrappers; consumers use SageStore) -----------
 def sage_write(
     rs: ReadSet,
     consensus: np.ndarray,
@@ -87,15 +181,13 @@ def sage_write(
 
 def sage_read(
     sf_or_db: SageFile | DeviceBlocks,
-    fmt: OutputFormat = OutputFormat.TOKENS_2BIT,
+    fmt="2bit",
     kmer_k: Optional[int] = None,
 ) -> dict[str, jax.Array]:
-    """Decode all blocks to the requested format (SAGe_Read)."""
+    """Decode all blocks to the requested format (SAGe_Read, one-shot form).
+
+    Kept for core-internal and throwaway use; persistent consumers open a
+    :class:`repro.core.store.SageReadSession` instead."""
     db = sf_or_db if isinstance(sf_or_db, DeviceBlocks) else prepare_device_blocks(sf_or_db)
     out = decode_file_jax(db)
-    if fmt == OutputFormat.ONE_HOT:
-        out["onehot"] = one_hot_bases(out["tokens"])
-    elif fmt == OutputFormat.KMER:
-        assert kmer_k is not None, "KMER format needs kmer_k"
-        out["kmer"] = kmer_pack(out["tokens"], kmer_k)
-    return out
+    return apply_format(dict(out), fmt, kmer_k=kmer_k)

@@ -116,18 +116,25 @@ class SageFile:
         return n
 
     def save(self, path: str | Path) -> None:
+        """Serialize to ``.npz``. Absent streams are genuinely omitted from the
+        archive: fixed-read-length files carry no ``leng``/``lena`` entries
+        (see the stream table above), matching what :meth:`load` tolerates."""
         path = Path(path)
         np.savez_compressed(
             path,
             meta=np.frombuffer(self.meta.to_json().encode(), dtype=np.uint8),
             consensus2b=self.consensus2b,
             directory=self.directory,
-            **{f"s_{k}": v for k, v in self.streams.items()},
+            **{f"s_{k}": v for k, v in self.streams.items() if v.size > 0},
         )
 
     @classmethod
     def load(cls, path: str | Path) -> "SageFile":
+        """Load a container; streams missing from the archive (e.g. ``leng``/
+        ``lena`` for fixed-read-length files) come back as empty arrays, which
+        every decoder treats as "no entries"."""
         z = np.load(path)
         meta = SageMeta.from_json(bytes(z["meta"]).decode())
-        streams = {k: z[f"s_{k}"] for k in STREAMS}
+        empty = np.zeros(0, dtype=np.uint32)
+        streams = {k: (z[f"s_{k}"] if f"s_{k}" in z.files else empty) for k in STREAMS}
         return cls(meta=meta, consensus2b=z["consensus2b"], directory=z["directory"], streams=streams)

@@ -1,0 +1,354 @@
+"""`SageStore`: the session-based streaming access layer over SAGe containers.
+
+This is the single surface every consumer goes through (the ROADMAP's
+production-serving north star; storage-centric designs à la GenStore/MegIS
+keep *one* access path between the compressed store and all analysis
+systems). It maps the paper's three-command contract (§5.3) onto:
+
+  SAGe_Write  ``store.write(name, read_set, consensus)`` — compress + register
+  SAGe_Read   ``session.read(name, block_range, fmt, kmer_k=...)`` — ranged,
+              batched decode of any registered dataset to any FormatSpec
+  SAGe_ISP    ``session.read_stream(name, consumer, ...)`` — double-buffered
+              prefetch that hands each decoded block group to an analysis-side
+              consumer callable as soon as it is ready
+
+A store registers many datasets by name (``SageFile`` objects or lazy paths)
+and keeps an LRU of prepared :class:`DeviceBlocks` so hot datasets stay
+device-resident while cold ones are re-prepared on demand. Sessions choose
+the decode path (vmapped JAX or the Pallas kernel) once; every command on
+the session uses it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from collections import OrderedDict
+from pathlib import Path
+from typing import Callable, Iterator, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.api import apply_format, get_format
+from repro.core.decode_jax import (
+    DeviceBlocks,
+    decode_file_jax,
+    prepare_device_blocks,
+)
+from repro.core.encoder import SageEncoder
+from repro.core.format import D, SageFile
+
+BlockRange = Union[None, int, tuple, Sequence[int]]
+
+
+def slice_device_blocks(db: DeviceBlocks, ids: np.ndarray) -> DeviceBlocks:
+    """A DeviceBlocks view holding only the selected blocks (block-major
+    gather; blocks decode independently, so any subset is decodable)."""
+    return DeviceBlocks(
+        arrays={k: v[ids] for k, v in db.arrays.items()},
+        caps=db.caps,
+        classes=db.classes,
+        fixed_len=db.fixed_len,
+        n_blocks=len(ids),
+    )
+
+
+@dataclasses.dataclass
+class StreamBatch:
+    """One SAGe_ISP delivery: a decoded (and formatted) group of blocks."""
+
+    name: str
+    epoch: int
+    block_ids: np.ndarray  # global block indices in stream order
+    data: dict[str, jax.Array]  # decode result (+ the format's out_key)
+    next_block: int = 0  # stream cursor after this fetch (consumers resume here)
+    next_epoch: int = 0  # epochs completed after this fetch, relative to stream start
+
+
+class SageStore:
+    """Registry of SAGe datasets with LRU-cached device preparation."""
+
+    def __init__(self, max_prepared: int = 4) -> None:
+        if max_prepared < 1:
+            raise ValueError("max_prepared must be >= 1")
+        self.max_prepared = max_prepared
+        self._sources: dict[str, Union[SageFile, str]] = {}
+        self._files: dict[str, SageFile] = {}
+        self._prepared: "OrderedDict[str, DeviceBlocks]" = OrderedDict()
+        self._lock = threading.RLock()
+
+    # ---------------------------------------------------------- registration
+    def register(self, name: str, src: Union[SageFile, str, Path]) -> None:
+        """Register a dataset: an in-memory SageFile or a path loaded lazily."""
+        with self._lock:
+            self._sources[name] = src if isinstance(src, SageFile) else str(src)
+            self._files.pop(name, None)
+            self._prepared.pop(name, None)
+
+    def write(
+        self,
+        name: str,
+        read_set,
+        consensus: np.ndarray,
+        token_target: int = 65536,
+        **enc_kwargs,
+    ) -> SageFile:
+        """SAGe_Write: compress ``read_set`` against ``consensus`` and register
+        the result under ``name``."""
+        sf = SageEncoder(consensus, token_target=token_target, **enc_kwargs).encode(read_set)
+        self.register(name, sf)
+        return sf
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._sources)
+
+    def evict(self, name: Optional[str] = None) -> None:
+        """Drop prepared device state (all datasets when ``name`` is None)."""
+        with self._lock:
+            if name is None:
+                self._prepared.clear()
+            else:
+                self._prepared.pop(name, None)
+
+    @property
+    def prepared_names(self) -> tuple[str, ...]:
+        """Datasets currently device-prepared, LRU order (oldest first)."""
+        return tuple(self._prepared)
+
+    # --------------------------------------------------------------- access
+    def file(self, name: str) -> SageFile:
+        with self._lock:
+            if name not in self._files:
+                src = self._sources.get(name)
+                if src is None:
+                    raise KeyError(f"dataset {name!r} not registered; have {self.names()}")
+                self._files[name] = src if isinstance(src, SageFile) else SageFile.load(src)
+            return self._files[name]
+
+    def prepared(self, name: str) -> DeviceBlocks:
+        """Prepared DeviceBlocks for ``name`` (LRU-cached)."""
+        with self._lock:
+            if name in self._prepared:
+                self._prepared.move_to_end(name)
+                return self._prepared[name]
+            db = prepare_device_blocks(self.file(name))
+            self._prepared[name] = db
+            while len(self._prepared) > self.max_prepared:
+                self._prepared.popitem(last=False)
+            return db
+
+    def n_blocks(self, name: str) -> int:
+        return self.file(name).meta.n_blocks
+
+    def consensus_windows(self, name: str, ids: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
+        """Per-block consensus windows as base codes.
+
+        Returns ``(windows, starts)``: windows is (len(ids), caps.window) int8;
+        starts is the global consensus coordinate of each window's base 0
+        (for localizing the decoder's global ``read_pos``)."""
+        from repro.core.bitio import unpack_2bit
+
+        db = self.prepared(name)
+        ids = np.asarray(ids, dtype=np.int64)
+        wins = np.stack(
+            [unpack_2bit(db.arrays["cons"][int(b)], db.caps.window).astype(np.int8) for b in ids]
+        )
+        starts = db.arrays["dir"][ids, D["cons_start"]].astype(np.int64)
+        return wins, starts
+
+    def session(self, *, use_pallas: bool = False, interpret: bool = True) -> "SageReadSession":
+        return SageReadSession(self, use_pallas=use_pallas, interpret=interpret)
+
+
+class SageReadSession:
+    """One consumer's view of a store: the paper's command set with a fixed
+    decode path (vmap or Pallas) chosen per session."""
+
+    def __init__(self, store: SageStore, *, use_pallas: bool = False, interpret: bool = True) -> None:
+        self.store = store
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+
+    # ------------------------------------------------------------ SAGe_Write
+    def write(self, name: str, read_set, consensus, **kwargs) -> SageFile:
+        return self.store.write(name, read_set, consensus, **kwargs)
+
+    # ------------------------------------------------------------- SAGe_Read
+    def resolve_blocks(self, name: str, block_range: BlockRange) -> np.ndarray:
+        """Normalize a block range to an array of global block ids."""
+        nb = self.store.n_blocks(name)
+        if block_range is None:
+            return np.arange(nb, dtype=np.int64)
+        if isinstance(block_range, (int, np.integer)):
+            block_range = (int(block_range), int(block_range) + 1)
+        if isinstance(block_range, tuple) and len(block_range) == 2:
+            lo, hi = int(block_range[0]), int(block_range[1])
+            if not (0 <= lo < hi <= nb):
+                raise ValueError(
+                    f"block range ({lo}, {hi}) out of bounds for dataset {name!r} "
+                    f"with {nb} blocks"
+                )
+            return np.arange(lo, hi, dtype=np.int64)
+        ids = np.asarray(list(block_range), dtype=np.int64)
+        if ids.size == 0 or ids.min() < 0 or ids.max() >= nb:
+            raise ValueError(f"block ids {ids} out of bounds for dataset {name!r} ({nb} blocks)")
+        return ids
+
+    def _decode(self, db: DeviceBlocks) -> dict[str, jax.Array]:
+        if self.use_pallas:
+            from repro.kernels.sage_decode import sage_decode_pallas
+
+            out = dict(sage_decode_pallas(db, interpret=self.interpret))
+        else:
+            out = dict(decode_file_jax(db))
+        return out
+
+    def read(
+        self,
+        name: str,
+        block_range: BlockRange = None,
+        fmt="2bit",
+        *,
+        kmer_k: Optional[int] = None,
+    ) -> dict[str, jax.Array]:
+        """SAGe_Read: decode a block range of ``name`` to ``fmt``.
+
+        Returns the block-major decode dict (tokens, read_* metadata,
+        n_reads/n_tokens) plus the format's output key and ``block_ids``."""
+        ids = self.resolve_blocks(name, block_range)
+        db = self.store.prepared(name)
+        out = self._decode(slice_device_blocks(db, ids))
+        if "n_reads" not in out:  # the Pallas kernel emits OUT_KEYS only
+            sf = self.store.file(name)
+            out["n_reads"] = np.asarray(sf.directory[ids, D["n_reads"]], dtype=np.int32)
+            out["n_tokens"] = np.asarray(sf.directory[ids, D["n_tokens"]], dtype=np.int32)
+        apply_format(
+            out, fmt, kmer_k=kmer_k, use_pallas=self.use_pallas,
+            interpret=self.interpret, context=f"SAGe_Read({name!r})",
+        )
+        out["block_ids"] = ids
+        return out
+
+    # -------------------------------------------------------------- SAGe_ISP
+    def read_stream(
+        self,
+        name: str,
+        consumer: Optional[Callable[[StreamBatch], object]] = None,
+        *,
+        fmt="2bit",
+        kmer_k: Optional[int] = None,
+        start_block: int = 0,
+        blocks_per_fetch: int = 4,
+        prefetch: int = 2,
+        wrap: bool = False,
+        max_fetches: Optional[int] = None,
+    ):
+        """SAGe_ISP: stream decoded block groups into an analysis consumer.
+
+        With ``consumer`` set, drives the stream to completion and returns the
+        list of consumer results (decode of group #i+1 overlaps the consumer
+        on group #i via ``prefetch`` background buffers). With ``consumer=None``
+        returns the :class:`StreamBatch` iterator for pull-based consumers.
+
+        ``wrap=True`` cycles block groups forever (epoch increments at each
+        wraparound) — bound it with ``max_fetches`` or pull-based iteration.
+        """
+        nb = self.store.n_blocks(name)  # validate eagerly, not at first next()
+        if not (0 <= start_block < nb):
+            raise ValueError(f"start_block {start_block} out of bounds (0..{nb - 1})")
+        if blocks_per_fetch < 1:
+            raise ValueError(f"blocks_per_fetch must be >= 1, got {blocks_per_fetch}")
+        get_format(fmt)
+        it = self._stream_iter(
+            name, fmt=fmt, kmer_k=kmer_k, start_block=start_block,
+            blocks_per_fetch=blocks_per_fetch, prefetch=prefetch,
+            wrap=wrap, max_fetches=max_fetches,
+        )
+        if consumer is None:
+            return it
+        if wrap and max_fetches is None:
+            raise ValueError("read_stream(consumer=..., wrap=True) needs max_fetches")
+        return [consumer(batch) for batch in it]
+
+    def _group_ids(
+        self, nb: int, start_block: int, blocks_per_fetch: int, wrap: bool,
+        max_fetches: Optional[int],
+    ) -> Iterator[tuple[int, np.ndarray, int, int]]:
+        """Yield (epoch, block id group, next_block, next_epoch) in stream
+        order — the single source of truth for cyclic-advance bookkeeping
+        (bounds are validated eagerly in ``read_stream``)."""
+        b, epoch, fetches = start_block, 0, 0
+        while True:
+            if max_fetches is not None and fetches >= max_fetches:
+                return
+            if wrap:
+                ids = (b + np.arange(blocks_per_fetch, dtype=np.int64)) % nb
+                nxt_epoch = epoch + (1 if b + blocks_per_fetch >= nb else 0)
+                nxt_b = (b + blocks_per_fetch) % nb
+                yield epoch, ids, nxt_b, nxt_epoch
+                b, epoch = nxt_b, nxt_epoch
+            else:
+                if b >= nb:
+                    return
+                ids = np.arange(b, min(b + blocks_per_fetch, nb), dtype=np.int64)
+                yield 0, ids, min(b + blocks_per_fetch, nb), 0
+                b += blocks_per_fetch
+            fetches += 1
+
+    def _stream_iter(
+        self, name: str, *, fmt, kmer_k, start_block, blocks_per_fetch,
+        prefetch, wrap, max_fetches,
+    ) -> Iterator[StreamBatch]:
+        nb = self.store.n_blocks(name)
+        groups = self._group_ids(nb, start_block, blocks_per_fetch, wrap, max_fetches)
+
+        def produce(epoch: int, ids: np.ndarray, nxt_b: int, nxt_epoch: int) -> StreamBatch:
+            data = self.read(name, ids, fmt, kmer_k=kmer_k)
+            return StreamBatch(name=name, epoch=epoch, block_ids=ids, data=data,
+                               next_block=nxt_b, next_epoch=nxt_epoch)
+
+        if prefetch <= 0:  # synchronous: decode on demand, fully deterministic
+            for g in groups:
+                yield produce(*g)
+            return
+
+        q: queue.Queue = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+        done = object()
+
+        def worker() -> None:
+            try:
+                for g in groups:
+                    item: object = produce(*g)
+                    while not stop.is_set():
+                        try:
+                            q.put(item, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+                    if stop.is_set():
+                        return
+                item = done
+            except Exception as e:  # propagated to the consumer thread
+                item = e
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is done:
+                    return
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            stop.set()

@@ -1,15 +1,17 @@
-"""SAGe-backed training data pipeline.
+"""SAGe-backed training data pipeline — a consumer of the SageStore stream.
 
 The paper's end-to-end pipeline (I/O ∥ decompress ∥ analysis, §3/§7) maps
-onto: host block fetch -> device SAGe decode -> k-mer reformat -> token
+onto: ``SageReadSession.read_stream`` (SAGe_ISP) -> k-mer reformat -> token
 batches, with DOUBLE-BUFFERED prefetch so data preparation overlaps the
 train step exactly like the paper overlaps decompression with mapping
 (batch#i prepares while batch#i-1 trains).
 
-Determinism & fault tolerance: the cursor is (epoch, block index, batch
-offset) — restarting from a checkpoint replays the exact stream (the block
+Determinism & fault tolerance: the cursor is (epoch, block index, consumed
+tokens) — restarting from a checkpoint replays the exact stream (the block
 directory is the unit of restart, mirroring its role as the unit of
-storage/NAND-channel layout in the paper).
+storage/NAND-channel layout in the paper). The k-mer token stream is blocks
+in cyclic order with PAD groups dropped, so it is invariant to
+``blocks_per_fetch`` and to which decode path the session uses.
 """
 
 from __future__ import annotations
@@ -17,15 +19,13 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Union
 
-import jax
 import numpy as np
 
 from repro.core.api import kmer_special_ids, pick_k
-from repro.core.decode_jax import PAD_BASE, DeviceBlocks, prepare_device_blocks
-from repro.core.format import SageFile
-from repro.kernels import ops as KOPS
+from repro.core.format import D, SageFile
+from repro.core.store import SageReadSession, SageStore
 
 
 @dataclasses.dataclass
@@ -43,23 +43,42 @@ class Cursor:
 
 
 class SageTokenPipeline:
-    """Streams (tokens, labels) LM batches from a SAGe-compressed read set."""
+    """Streams (tokens, labels) LM batches from a SAGe-compressed read set.
+
+    ``source`` is either a :class:`SageFile` (registered into a private store)
+    or the name of a dataset already registered in ``store``."""
 
     def __init__(
         self,
-        sf: SageFile,
+        source: Union[SageFile, str],
         vocab_size: int,
         batch: int,
         seq_len: int,
         *,
+        name: str = "train",
+        store: Optional[SageStore] = None,
         use_pallas_decode: bool = False,
         blocks_per_fetch: int = 4,
         prefetch: int = 2,
         cursor: Optional[Cursor] = None,
         seed: int = 0,
     ) -> None:
+        if isinstance(source, SageFile):
+            if store is not None and name in store.names() and store.file(name) is not source:
+                raise ValueError(
+                    f"dataset {name!r} already registered in the store with a different "
+                    f"source; pass a unique name= to avoid clobbering it"
+                )
+            self.store = store or SageStore()
+            self.name = name
+            self.store.register(self.name, source)
+        else:
+            if store is None:
+                raise ValueError("named dataset source requires a store")
+            self.store, self.name = store, source
+        self.session: SageReadSession = self.store.session(use_pallas=use_pallas_decode)
+        sf = self.store.file(self.name)
         self.sf = sf
-        self.db: DeviceBlocks = prepare_device_blocks(sf)
         self.k = pick_k(vocab_size)
         self.sp = kmer_special_ids(self.k)
         self.batch = batch
@@ -67,36 +86,32 @@ class SageTokenPipeline:
         self.blocks_per_fetch = blocks_per_fetch
         self.prefetch = prefetch
         self.cursor = cursor or Cursor()
-        self.use_pallas = use_pallas_decode
         self._buf = np.zeros((0,), np.int32)
         self._skip = 0  # tokens to drop after a cursor restore
+        self._stream = None  # lazy SAGe_ISP iterator, recreated on restore
+        self._stream_epoch0 = self.cursor.epoch  # epoch base of the open stream
         # deterministic k-mer count per block (tail group hits PAD, dropped)
-        from repro.core.format import D
         self._kpb = (np.asarray(sf.directory[:, D["n_tokens"]]) // self.k).astype(np.int64)
-        self._decode = jax.jit(
-            lambda arrs: self._decode_blocks(arrs), static_argnums=()
-        )
 
     # ------------------------------------------------------------------
-    def _decode_blocks(self, arrays):
-        from repro.core.decode_jax import decode_block_arrays
-
-        classes = {k: tuple(v) for k, v in self.db.classes.items()}
-        out = jax.vmap(
-            lambda blk: decode_block_arrays(blk, caps=self.db.caps, classes=classes, fixed_len=self.db.fixed_len)
-        )(arrays)
-        return KOPS.kmer_tokens(out["tokens"], self.k, use_pallas=False)
-
     def _fetch_tokens(self) -> np.ndarray:
-        """Decode the next group of blocks into a flat k-mer token stream."""
-        nb = self.db.n_blocks
-        ids = [(self.cursor.block + i) % nb for i in range(self.blocks_per_fetch)]
-        wrapped = self.cursor.block + self.blocks_per_fetch >= nb
-        arrays = {k: jax.numpy.asarray(v[ids]) for k, v in self.db.arrays.items()}
-        km = np.asarray(self._decode(arrays))  # (nb_f, C//k)
-        self.cursor.block = (self.cursor.block + self.blocks_per_fetch) % nb
-        if wrapped:
-            self.cursor.epoch += 1
+        """Pull the next block group off the SAGe_ISP stream as flat k-mers."""
+        if self._stream is None:
+            self._stream_epoch0 = self.cursor.epoch
+            self._stream = self.session.read_stream(
+                self.name,
+                fmt="kmer",
+                kmer_k=self.k,
+                start_block=self.cursor.block,
+                blocks_per_fetch=self.blocks_per_fetch,
+                prefetch=0,  # batch-level prefetch lives in prefetched()
+                wrap=True,
+            )
+        sb = next(self._stream)
+        # the stream is the single source of truth for cyclic-advance state
+        self.cursor.block = sb.next_block
+        self.cursor.epoch = self._stream_epoch0 + sb.next_epoch
+        km = np.asarray(sb.data["kmer"])  # (blocks_per_fetch, C//k)
         flat = km.reshape(-1)
         out = flat[flat != self.sp["pad"]].astype(np.int32)
         if self._skip:
@@ -164,3 +179,4 @@ class SageTokenPipeline:
         self.cursor = Cursor(epoch=epoch, block=block, consumed=consumed)
         self._buf = np.zeros((0,), np.int32)
         self._skip = within
+        self._stream = None  # re-open the ISP stream at the restored block

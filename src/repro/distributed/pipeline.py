@@ -12,7 +12,6 @@ shard after partitioning — standard shard_map pipelining."""
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -94,3 +94,25 @@ def filter_block(decoded: dict, cons_window, max_k: int = 2):
     valid = jnp.arange(mask.shape[0]) < decoded["n_reads"]
     mask = mask & valid
     return mask, jnp.sum(mask)
+
+
+def filter_store_blocks(session, name: str, block_range=None):
+    """Store-backed SAGe_ISP filter driver: decode a block range through a
+    :class:`repro.core.store.SageReadSession` and exact-prune each block.
+
+    Returns ``(masks, pruned, total)``: per-block prune masks (block-major
+    bool array aligned with the range's blocks) plus aggregate counts."""
+    out = session.read(name, block_range)
+    ids = out["block_ids"]
+    wins, starts = session.store.consensus_windows(name, ids)
+    masks = []
+    pruned = total = 0
+    for i in range(len(ids)):
+        dec = {k: jnp.asarray(np.asarray(v)[i]) for k, v in out.items() if k != "block_ids"}
+        # decode reports GLOBAL positions; the filter works block-locally
+        dec["read_pos"] = jnp.where(dec["read_pos"] >= 0, dec["read_pos"] - int(starts[i]), -1)
+        mask, n = filter_block(dec, jnp.asarray(wins[i]))
+        masks.append(np.asarray(mask))
+        pruned += int(n)
+        total += int(np.asarray(out["n_reads"])[i])
+    return np.stack(masks), pruned, total

@@ -343,6 +343,74 @@ class ReadMapper:
         return segs
 
 
+@dataclasses.dataclass
+class StoreMappingReport:
+    """Outcome of mapping a stored dataset through the SAGe_ISP path."""
+
+    total: int = 0
+    pruned: int = 0  # exact matches skipped before the mapper (GenStore-EM)
+    mapped: int = 0
+    unmapped: int = 0
+
+
+def map_store_reads(
+    session,
+    name: str,
+    consensus: np.ndarray,
+    *,
+    mapper: Optional[ReadMapper] = None,
+    block_range=None,
+    blocks_per_fetch: int = 2,
+    prefetch: int = 2,
+    prune_exact: bool = True,
+) -> StoreMappingReport:
+    """Map every read of a stored dataset: SAGe_ISP decode stream -> exact
+    match pruning (in-storage-filter style) -> banded mapper for survivors.
+
+    ``session`` is a :class:`repro.core.store.SageReadSession`; decode of the
+    next block group overlaps mapping of the current one via the stream's
+    prefetch buffers."""
+    mapper = mapper or ReadMapper(consensus)
+    rep = StoreMappingReport()
+
+    def consume(sb) -> None:
+        d = sb.data
+        toks = np.asarray(d["tokens"])
+        n_reads = np.asarray(d["n_reads"])
+        starts, lens = np.asarray(d["read_start"]), np.asarray(d["read_len"])
+        poss, revs = np.asarray(d["read_pos"]), np.asarray(d["read_rev"])
+        for bi in range(toks.shape[0]):
+            for r in range(int(n_reads[bi])):
+                seq = toks[bi, starts[bi, r] : starts[bi, r] + lens[bi, r]].astype(np.uint8)
+                pos = int(poss[bi, r])
+                if prune_exact and pos >= 0:
+                    cand = consensus[pos : pos + seq.size]
+                    fwd = revcomp(seq) if revs[bi, r] else seq
+                    if cand.size == fwd.size and np.array_equal(cand, fwd):
+                        rep.pruned += 1
+                        rep.total += 1
+                        continue
+                if mapper.map_read(seq) is not None:
+                    rep.mapped += 1
+                else:
+                    rep.unmapped += 1
+                rep.total += 1
+
+    if block_range is None:
+        session.read_stream(
+            name, consume, blocks_per_fetch=blocks_per_fetch, prefetch=prefetch
+        )
+    else:  # explicit range: chunked ranged reads (no wraparound semantics)
+        from repro.core.store import StreamBatch
+
+        ids = session.resolve_blocks(name, block_range)
+        for i in range(0, len(ids), blocks_per_fetch):
+            sub = ids[i : i + blocks_per_fetch]
+            consume(StreamBatch(name=name, epoch=0, block_ids=sub,
+                                data=session.read(name, sub)))
+    return rep
+
+
 def apply_alignment(aln_pos: int, ops: list[tuple], length: int, cons: np.ndarray) -> np.ndarray:
     """Reconstruct the (forward-strand) read from consensus + ops. Oracle used
     by tests and the reference decoder."""

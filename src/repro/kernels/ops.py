@@ -8,8 +8,6 @@ dispatch-invariant by construction (asserted in tests/test_kernels.py).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

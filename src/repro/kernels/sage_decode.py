@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.decode_jax import DeviceBlocks, decode_block_arrays
-from repro.core.format import NDIR, STREAMS
+from repro.core.format import STREAMS
 
 OUT_KEYS = ("tokens", "read_pos", "read_rev", "read_start", "read_len", "read_corner")
 

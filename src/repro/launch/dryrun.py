@@ -27,7 +27,7 @@ import jax
 
 from repro.configs import ARCHS, SHAPES, get_arch, get_shape
 from repro.distributed.sharding import Rules, use_rules
-from repro.launch.hlo_cost import COLLECTIVES, analyze
+from repro.launch.hlo_cost import analyze
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
 from repro.launch.specs import build_case
 from repro.training.steps import TrainOptions

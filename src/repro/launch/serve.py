@@ -10,14 +10,12 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
-from repro.core import OutputFormat, sage_read, sage_write
-from repro.core.decode_jax import prepare_device_blocks
+from repro.core import SageStore
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.models import lm
-from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.engine import ServeConfig, ServingEngine, prompts_from_store
 
 
 def main() -> None:
@@ -40,16 +38,12 @@ def main() -> None:
     # prompts straight from SAGe-compressed storage (SAGe_Read -> KMER)
     ref = make_reference(40_000, seed=3)
     rs = sample_read_set(ref, "illumina", depth=1, seed=4, max_reads=args.requests * 2)
-    sf = sage_write(rs, ref, token_target=8192)
-    k = 3
-    out = sage_read(prepare_device_blocks(sf), fmt=OutputFormat.KMER, kmer_k=k)
-    km = np.asarray(out["kmer"])
-    starts, lens = np.asarray(out["read_start"]), np.asarray(out["read_len"])
-    prompts = []
-    bi = 0
-    for r in range(min(args.requests, int(np.asarray(out["n_reads"])[bi]))):
-        s, l = int(starts[bi, r]) // k, int(lens[bi, r]) // k
-        prompts.append((km[bi, s : s + min(l, args.max_prompt)] % cfg.vocab).astype(np.int32))
+    store = SageStore()
+    store.write("serve", rs, ref, token_target=8192)
+    prompts = prompts_from_store(
+        store.session(), "serve", vocab=cfg.vocab, n_prompts=args.requests,
+        max_prompt=args.max_prompt, kmer_k=3,
+    )
 
     t0 = time.time()
     outs = eng.generate(prompts)

@@ -7,7 +7,6 @@ exercises the exact same code paths the launcher runs.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -158,7 +157,7 @@ def build_sage_fused_case(cfg: ArchConfig, cell: ShapeCell, rules: Rules, opts: 
 
     from repro.core.api import pick_k
     from repro.core.decode_jax import decode_block_arrays
-    from repro.core.format import BlockCaps, NDIR, STREAMS
+    from repro.core.format import BlockCaps, NDIR
     from repro.kernels import ops as KOPS
     from repro.training.steps import make_train_step
 

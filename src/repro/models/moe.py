@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import F32, _act, dense_init, mlp_apply, mlp_init
-from repro.distributed.sharding import shard_act
 
 
 def moe_init(key, cfg, dtype=F32) -> dict:

@@ -16,7 +16,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.api import pick_k
+from repro.core.store import SageReadSession
 from repro.models import lm
+
+
+def prompts_from_store(
+    session: SageReadSession,
+    name: str,
+    *,
+    vocab: int,
+    n_prompts: int = 8,
+    max_prompt: int = 64,
+    kmer_k: Optional[int] = None,
+    block_range=None,
+) -> list[np.ndarray]:
+    """SAGe_Read -> serving prompt feed: decoded reads of a stored dataset as
+    k-mer token prompts (the paper's "send each read to the analysis system
+    as soon as it is decoded" contract, §5.1).
+
+    Walks the requested block range in order and emits one prompt per read
+    (its k-mer token prefix, folded into ``vocab``) until ``n_prompts``."""
+    k = kmer_k if kmer_k is not None else pick_k(vocab)
+    out = session.read(name, block_range, fmt="kmer", kmer_k=k)
+    km = np.asarray(out["kmer"])
+    starts, lens = np.asarray(out["read_start"]), np.asarray(out["read_len"])
+    n_reads = np.asarray(out["n_reads"])
+    prompts: list[np.ndarray] = []
+    for bi in range(km.shape[0]):
+        for r in range(int(n_reads[bi])):
+            s, l = int(starts[bi, r]) // k, int(lens[bi, r]) // k
+            if l == 0:
+                continue
+            prompts.append((km[bi, s : s + min(l, max_prompt)] % vocab).astype(np.int32))
+            if len(prompts) >= n_prompts:
+                return prompts
+    return prompts
 
 
 @dataclasses.dataclass

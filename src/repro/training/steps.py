@@ -11,8 +11,7 @@ options (beyond-paper §Perf levers):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.bitio import unpack_2bit
 from repro.core.decode_jax import decode_file_jax, prepare_device_blocks
-from repro.genomics.filter_jax import exact_match_mask, filter_block, myers_distance
+from repro.genomics.filter_jax import filter_block, myers_distance
 
 
 def _lev(a, b):

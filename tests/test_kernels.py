@@ -6,12 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import refdec
 from repro.core.decode_jax import prepare_device_blocks
-from repro.core.encoder import SageEncoder
-from repro.genomics.synth import make_reference, sample_read_set
 from repro.kernels import ops
-from repro.kernels import ref as REF
 
 from conftest import multiset
 

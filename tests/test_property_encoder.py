@@ -1,6 +1,9 @@
 """Hypothesis property tests on the system's core invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests skip without it
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

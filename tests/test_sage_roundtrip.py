@@ -2,7 +2,6 @@
 
 import numpy as np
 import jax
-import pytest
 
 from repro.core import refdec
 from repro.core.decode_jax import decode_file_jax, prepare_device_blocks
@@ -46,8 +45,6 @@ def test_decoded_positions_are_true_mapping_positions(illumina_encoded):
     (SAGe serves analysis systems; positions feed the mapper integration)."""
     rs, sf = illumina_encoded
     dec = refdec.decode_all(sf)
-    from repro.genomics.synth import revcomp
-
     cons_len = sf.meta.cons_len
     for d in dec[:100]:
         if d.corner:

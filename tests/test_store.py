@@ -1,0 +1,234 @@
+"""SageStore / SageReadSession: the session-based streaming read API.
+
+Covers the acceptance contract: ranged reads match whole-file decode for
+every registered FormatSpec, the SAGe_ISP stream delivers every block to a
+consumer, the LRU keeps at most ``max_prepared`` datasets device-resident,
+and the container round-trips both read kinds with absent streams omitted.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    SageStore,
+    available_formats,
+    get_format,
+)
+from repro.core.encoder import SageEncoder
+from repro.core.format import SageFile
+from repro.genomics.filter_jax import filter_store_blocks
+from repro.genomics.mapper import map_store_reads
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.serving.engine import prompts_from_store
+
+
+@pytest.fixture(scope="module")
+def small_store():
+    ref = make_reference(24_000, seed=40)
+    rs = sample_read_set(ref, "illumina", depth=3, seed=41)
+    store = SageStore(max_prepared=2)
+    store.write("ds", rs, ref, token_target=4096)
+    return store, ref, rs
+
+
+# ------------------------------------------------------------- SAGe_Read
+@pytest.mark.parametrize("fmt", sorted(["2bit", "onehot", "kmer"]))
+def test_ranged_read_matches_whole_file_slice(small_store, fmt):
+    """read(name, (lo, hi)) must equal the corresponding slice of a
+    whole-file decode for every FormatSpec (blocks decode independently)."""
+    store, _, _ = small_store
+    sess = store.session()
+    whole = sess.read("ds", fmt=fmt, kmer_k=4)
+    nb = store.n_blocks("ds")
+    lo, hi = 1, min(4, nb)
+    part = sess.read("ds", (lo, hi), fmt=fmt, kmer_k=4)
+    spec = get_format(fmt)
+    for key in ("tokens", "read_start", "read_len", "read_pos", "n_reads", spec.out_key):
+        np.testing.assert_array_equal(
+            np.asarray(part[key]), np.asarray(whole[key])[lo:hi], err_msg=key
+        )
+    np.testing.assert_array_equal(part["block_ids"], np.arange(lo, hi))
+
+
+def test_every_registered_format_is_tested():
+    assert set(available_formats()) == {"2bit", "onehot", "kmer"}
+
+
+def test_pallas_session_matches_vmap_session(small_store):
+    store, _, _ = small_store
+    vm = store.session().read("ds", (0, 2), fmt="kmer", kmer_k=4)
+    pl = store.session(use_pallas=True).read("ds", (0, 2), fmt="kmer", kmer_k=4)
+    for key in ("tokens", "read_start", "read_len", "n_reads", "kmer"):
+        np.testing.assert_array_equal(np.asarray(pl[key]), np.asarray(vm[key]), err_msg=key)
+
+
+def test_block_range_forms_and_validation(small_store):
+    store, _, _ = small_store
+    sess = store.session()
+    nb = store.n_blocks("ds")
+    one = sess.read("ds", 0)
+    assert np.asarray(one["tokens"]).shape[0] == 1
+    explicit = sess.read("ds", [2, 0])
+    np.testing.assert_array_equal(explicit["block_ids"], [2, 0])
+    with pytest.raises(ValueError):
+        sess.read("ds", (0, nb + 1))
+    with pytest.raises(ValueError):
+        sess.read("ds", (3, 3))
+    with pytest.raises(KeyError):
+        sess.read("nope")
+
+
+def test_kmer_format_requires_k_with_context(small_store):
+    store, _, _ = small_store
+    with pytest.raises(ValueError, match=r"SAGe_Read\('ds'\).*kmer_k"):
+        store.session().read("ds", fmt="kmer")
+
+
+# -------------------------------------------------------------- SAGe_ISP
+def test_read_stream_consumer_covers_every_block(small_store):
+    store, _, rs = small_store
+    sess = store.session()
+    seen: list[np.ndarray] = []
+
+    def consumer(sb):
+        seen.append(np.asarray(sb.block_ids))
+        return int(np.asarray(sb.data["n_reads"]).sum())
+
+    counts = sess.read_stream("ds", consumer, blocks_per_fetch=3)
+    assert np.concatenate(seen).tolist() == list(range(store.n_blocks("ds")))
+    assert sum(counts) == rs.n_reads
+
+
+def test_read_stream_wrap_epochs_and_bounds(small_store):
+    store, _, _ = small_store
+    sess = store.session()
+    nb = store.n_blocks("ds")
+    batches = list(
+        sess.read_stream("ds", fmt="2bit", blocks_per_fetch=nb - 1, wrap=True, max_fetches=3)
+    )
+    assert [b.epoch for b in batches] == [0, 0, 1]  # second fetch wraps
+    np.testing.assert_array_equal(batches[1].block_ids[0], (nb - 1) % nb)
+    with pytest.raises(ValueError):
+        sess.read_stream("ds", lambda b: None, wrap=True)  # unbounded consumer
+    with pytest.raises(ValueError):
+        sess.read_stream("ds", start_block=nb)  # eager bounds check
+    with pytest.raises(ValueError):
+        sess.read_stream("ds", blocks_per_fetch=0)  # would spin forever
+
+
+def test_read_stream_prefetched_matches_sync(small_store):
+    store, _, _ = small_store
+    sess = store.session()
+    sync = list(sess.read_stream("ds", blocks_per_fetch=2, prefetch=0))
+    pre = list(sess.read_stream("ds", blocks_per_fetch=2, prefetch=2))
+    assert len(sync) == len(pre)
+    for a, b in zip(sync, pre):
+        np.testing.assert_array_equal(np.asarray(a.data["tokens"]), np.asarray(b.data["tokens"]))
+
+
+# ----------------------------------------------------------- store management
+def test_lru_keeps_at_most_max_prepared(small_store):
+    _, ref, rs = small_store
+    store = SageStore(max_prepared=2)
+    for name in ("a", "b", "c"):
+        store.register(name, SageEncoder(ref, token_target=4096).encode(rs))
+    store.prepared("a")
+    store.prepared("b")
+    store.prepared("c")  # evicts "a"
+    assert store.prepared_names == ("b", "c")
+    store.prepared("b")  # refresh -> "c" is now oldest
+    store.prepared("a")  # evicts "c"
+    assert store.prepared_names == ("b", "a")
+    store.evict()
+    assert store.prepared_names == ()
+
+
+def test_lazy_path_registration(small_store, tmp_path):
+    store, _, rs = small_store
+    p = tmp_path / "ds.sage.npz"
+    store.file("ds").save(p)
+    lazy = SageStore()
+    lazy.register("fromdisk", str(p))
+    out = lazy.session().read("fromdisk")
+    ref_out = store.session().read("ds")
+    np.testing.assert_array_equal(np.asarray(out["tokens"]), np.asarray(ref_out["tokens"]))
+
+
+# ------------------------------------------------- container save/load kinds
+def test_fixed_length_file_omits_length_streams(tmp_path):
+    """Fixed-read-length containers omit leng/lena on disk (per format.py's
+    stream table) and load() must tolerate their absence."""
+    from repro.genomics.synth import ReadSet
+
+    ref = make_reference(12_000, seed=60)
+    reads = [ref[i * 150 : i * 150 + 150].copy() for i in range(40)]
+    rs = ReadSet(reads=reads, quals=[np.full(150, 70, np.uint8)] * 40,
+                 kind="short", profile="illumina")
+    sf = SageEncoder(ref, token_target=2048).encode(rs)
+    assert sf.meta.fixed_read_len == 150 and sf.streams["leng"].size == 0
+    p = tmp_path / "fixed.sage.npz"
+    sf.save(p)
+    z = np.load(p)
+    assert "s_leng" not in z.files and "s_lena" not in z.files
+    sf2 = SageFile.load(p)
+    assert sf2.streams["leng"].size == 0
+    store = SageStore()
+    store.register("orig", sf)
+    store.register("reload", sf2)
+    sess = store.session()
+    np.testing.assert_array_equal(
+        np.asarray(sess.read("reload")["tokens"]), np.asarray(sess.read("orig")["tokens"])
+    )
+
+
+def test_variable_length_file_roundtrips_length_streams(tmp_path):
+    ref = make_reference(30_000, seed=50)
+    rs = sample_read_set(ref, "ont", depth=1.5, seed=51, max_reads=10)
+    sf = SageEncoder(ref, token_target=8192).encode(rs)
+    assert sf.meta.fixed_read_len == 0 and sf.streams["leng"].size > 0
+    p = tmp_path / "var.sage.npz"
+    sf.save(p)
+    sf2 = SageFile.load(p)
+    np.testing.assert_array_equal(sf2.streams["leng"], sf.streams["leng"])
+    store = SageStore()
+    store.register("var", sf)
+    store.register("var2", sf2)
+    sess = store.session()
+    np.testing.assert_array_equal(
+        np.asarray(sess.read("var")["tokens"]), np.asarray(sess.read("var2")["tokens"])
+    )
+
+
+# --------------------------------------------------------- consumer drivers
+def test_prompts_from_store(small_store):
+    store, _, _ = small_store
+    prompts = prompts_from_store(
+        store.session(), "ds", vocab=259, n_prompts=6, max_prompt=32, block_range=(0, 2)
+    )
+    assert len(prompts) == 6
+    for p in prompts:
+        assert p.dtype == np.int32 and 0 < p.size <= 32
+        assert p.min() >= 0 and p.max() < 259
+
+
+def test_map_store_reads_driver(small_store):
+    store, ref, rs = small_store
+    rep = map_store_reads(store.session(), "ds", ref, block_range=(0, 2), blocks_per_fetch=1)
+    assert rep.total == int(np.asarray(store.session().read("ds", (0, 2))["n_reads"]).sum())
+    assert rep.pruned + rep.mapped > 0.9 * rep.total
+
+
+def test_filter_store_blocks_driver(small_store):
+    store, ref, _ = small_store
+    masks, pruned, total = filter_store_blocks(store.session(), "ds", (0, 3))
+    assert masks.shape[0] == 3 and total > 0
+    # every pruned read must REALLY be an exact forward match vs consensus
+    out = jax.tree.map(np.asarray, store.session().read("ds", (0, 3)))
+    for i in range(3):
+        for r in np.nonzero(masks[i])[0]:
+            s, l = int(out["read_start"][i][r]), int(out["read_len"][i][r])
+            p = int(out["read_pos"][i][r])
+            np.testing.assert_array_equal(out["tokens"][i][s : s + l], ref[p : p + l])
+    assert pruned > 0

@@ -9,7 +9,7 @@ from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs import ARCHS
 from repro.core.api import kmer_special_ids, pick_k
 from repro.core.encoder import SageEncoder
-from repro.data.pipeline import Cursor, SageTokenPipeline
+from repro.data.pipeline import SageTokenPipeline
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.serving.engine import ServeConfig, ServingEngine
 from repro.training.optimizer import AdamWConfig
@@ -42,6 +42,77 @@ def test_pipeline_deterministic_and_resumable(sagefile):
     for b in first:
         assert b["tokens"].max() < 256
         assert (b["tokens"] != sp["pad"]).all()
+
+
+def _flat_kmer_stream(sf, vocab: int, n_tokens: int) -> np.ndarray:
+    """Ground-truth flat k-mer stream (blocks cyclic, PAD dropped) — the
+    pipeline's deterministic contract, independent of blocks_per_fetch."""
+    p = SageTokenPipeline(sf, vocab_size=vocab, batch=1, seq_len=8)
+    chunks: list[np.ndarray] = []
+    while sum(c.size for c in chunks) < n_tokens:
+        chunks.append(p._fetch_tokens())
+    return np.concatenate(chunks)
+
+
+def test_pipeline_restore_at_exact_block_boundary(sagefile):
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16)
+    boundary = int(p._kpb[:3].sum())  # consumed count ending exactly at block 3
+    p.restore({"cursor": {"epoch": 0, "block": 0, "consumed": boundary}})
+    assert p.cursor.block == 3 and p._skip == 0  # boundary maps to next block, no skip
+    need = 2 * 17
+    got = next(p.batches())
+    exp = _flat_kmer_stream(sagefile, 256, boundary + need)[boundary : boundary + need]
+    np.testing.assert_array_equal(got["tokens"], exp.reshape(2, 17)[:, :-1])
+
+
+def test_pipeline_restore_after_full_epoch(sagefile):
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16)
+    total = int(p._kpb.sum())
+    consumed = 2 * total + int(p._kpb[0] // 2)  # two full epochs + mid-block
+    p.restore({"cursor": {"epoch": 0, "block": 0, "consumed": consumed}})
+    assert p.cursor.epoch == 2
+    need = 2 * 17
+    flat = _flat_kmer_stream(sagefile, 256, total)[:total]
+    cyc = np.concatenate([flat, flat])  # the stream is cyclic across epochs
+    rem = consumed % total
+    got = next(p.batches())
+    np.testing.assert_array_equal(got["tokens"], cyc[rem : rem + need].reshape(2, 17)[:, :-1])
+
+
+def test_pipeline_blocks_per_fetch_exceeding_n_blocks(sagefile):
+    nb = sagefile.meta.n_blocks
+    big = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16,
+                            blocks_per_fetch=nb + 3)
+    small = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16,
+                              blocks_per_fetch=2)
+    bit, sit = big.batches(), small.batches()
+    for _ in range(3):
+        np.testing.assert_array_equal(next(bit)["tokens"], next(sit)["tokens"])
+    # restore still replays the exact stream when one fetch spans >1 epoch
+    state = big.state()
+    nxt = next(bit)
+    big2 = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16,
+                             blocks_per_fetch=nb + 3)
+    big2.restore(state)
+    np.testing.assert_array_equal(next(big2.batches())["tokens"], nxt["tokens"])
+
+
+def test_pipeline_refuses_to_clobber_shared_store_dataset(sagefile):
+    from repro.core import SageEncoder, SageStore
+    from repro.genomics.synth import make_reference, sample_read_set
+
+    store = SageStore()
+    store.register("train", sagefile)
+    other_ref = make_reference(10_000, seed=9)
+    other = SageEncoder(other_ref, token_target=2048).encode(
+        sample_read_set(other_ref, "illumina", depth=1, seed=10)
+    )
+    with pytest.raises(ValueError, match="already registered"):
+        SageTokenPipeline(other, vocab_size=256, batch=2, seq_len=16, store=store)
+    # same SageFile or a unique name are both fine
+    SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16, store=store)
+    SageTokenPipeline(other, vocab_size=256, batch=2, seq_len=16, store=store, name="other")
+    assert set(store.names()) == {"train", "other"}
 
 
 def test_pipeline_prefetch_matches_sync(sagefile):

@@ -1,6 +1,9 @@
 """Tests for dataset-adaptive bit-width class tuning."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests skip without it
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

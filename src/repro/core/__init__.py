@@ -17,7 +17,17 @@ from repro.core.api import (
     sage_read,
     sage_write,
 )
-from repro.core.decode_jax import PAD_BASE, DeviceBlocks, decode_file_jax, prepare_device_blocks
+from repro.core.decode_jax import (
+    PAD_BASE,
+    DeviceBlocks,
+    bucket_size,
+    decode_blocks_bucketed,
+    decode_file_jax,
+    pad_block_ids,
+    prepare_device_blocks,
+    reset_trace_counts,
+    trace_counts,
+)
 from repro.core.encoder import SageEncoder
 from repro.core.format import BlockCaps, SageFile, SageMeta
 from repro.core.store import SageReadSession, SageStore, StreamBatch, slice_device_blocks

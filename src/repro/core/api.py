@@ -27,7 +27,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.decode_jax import PAD_BASE, DeviceBlocks, decode_file_jax, prepare_device_blocks
+from repro.core.decode_jax import (
+    PAD_BASE,
+    DeviceBlocks,
+    decode_blocks_bucketed,
+    prepare_device_blocks,
+)
 from repro.core.encoder import SageEncoder
 from repro.core.format import SageFile
 from repro.genomics.synth import ReadSet
@@ -187,7 +192,10 @@ def sage_read(
     """Decode all blocks to the requested format (SAGe_Read, one-shot form).
 
     Kept for core-internal and throwaway use; persistent consumers open a
-    :class:`repro.core.store.SageReadSession` instead."""
+    :class:`repro.core.store.SageReadSession` instead. Routes through the
+    same power-of-two shape buckets as the store sessions, so one-shot and
+    session reads share jit cache entries."""
     db = sf_or_db if isinstance(sf_or_db, DeviceBlocks) else prepare_device_blocks(sf_or_db)
-    out = decode_file_jax(db)
+    db = db.to_device()
+    out = decode_blocks_bucketed(db, np.arange(db.n_blocks, dtype=np.int64))
     return apply_format(dict(out), fmt, kmer_k=kmer_k)

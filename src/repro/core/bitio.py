@@ -19,6 +19,7 @@ __all__ = [
     "unpack_bits",
     "pack_2bit",
     "unpack_2bit",
+    "unpack_2bit_batch",
 ]
 
 
@@ -138,8 +139,14 @@ def pack_2bit(codes: np.ndarray) -> np.ndarray:
 
 
 def unpack_2bit(words: np.ndarray, n: int) -> np.ndarray:
-    """Inverse of pack_2bit."""
+    """Inverse of pack_2bit (1-D case of :func:`unpack_2bit_batch`)."""
+    return unpack_2bit_batch(words, n)
+
+
+def unpack_2bit_batch(words: np.ndarray, n: int) -> np.ndarray:
+    """Batched inverse of pack_2bit: (..., W) packed rows -> (..., n) base
+    codes in one broadcasted shift — no Python loop over rows."""
     words = np.asarray(words, dtype=np.uint32)
-    shifts = (2 * np.arange(16, dtype=np.uint32))[None, :]
-    c = (words[:, None] >> shifts) & np.uint32(3)
-    return c.reshape(-1)[:n].astype(np.uint8)
+    shifts = 2 * np.arange(16, dtype=np.uint32)
+    c = (words[..., :, None] >> shifts) & np.uint32(3)
+    return c.reshape(*words.shape[:-1], -1)[..., :n].astype(np.uint8)

@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
+from collections import Counter
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,26 @@ import numpy as np
 from repro.core.format import D, STREAMS, SageFile
 
 PAD_BASE = 4  # output padding token
+
+
+# --------------------------------------------------------------------------
+# compile observability: trace counters
+# --------------------------------------------------------------------------
+# Each jitted entry point in the hot path bumps its counter *at trace time*
+# (the Python body of a jitted function only runs when XLA retraces it), so
+# these counters are exact recompile counts. The decode-throughput benchmark
+# and the bucketing tests read them to prove the compile-once contract.
+
+TRACE_COUNTS: Counter = Counter()
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of per-entry-point jit trace (= compile) counts."""
+    return dict(TRACE_COUNTS)
+
+
+def reset_trace_counts() -> None:
+    TRACE_COUNTS.clear()
 
 
 # --------------------------------------------------------------------------
@@ -121,14 +142,24 @@ def decode_block_arrays(
 ) -> dict[str, jax.Array]:
     """Decode one block. ``blk`` holds per-block stream word slices plus the
     directory row; everything is block-local. Returns the flat token buffer
-    plus per-read metadata."""
+    plus per-read metadata.
+
+    Mask contract: an optional ``blk["valid"]`` entry (shape (1,), 0 or 1)
+    gates the block. Invalid lanes — the padding that shape bucketing adds —
+    decode to all-PAD tokens, zero counts, and ``read_pos == -1``, bit-for-bit
+    deterministic regardless of which block's streams occupy the lane."""
     R, M = caps.segs, max(caps.mism, 1)
     I, U = max(caps.indel, 1), max(caps.multi, 1)
     C = caps.tokens
     row = blk["dir"]
+    valid = blk["valid"][0] if "valid" in blk else None
     n_segs = row[D["n_segs"]]
     n_mism = row[D["n_mism"]]
     n_tok = row[D["n_tokens"]]
+    if valid is not None:
+        n_segs = n_segs * valid
+        n_mism = n_mism * valid
+        n_tok = n_tok * valid
     # host prep pre-localizes base_pos (base_pos - cons_start), keeping all
     # device math int32-safe regardless of genome size
     base_local = row[D["base_pos"]]
@@ -260,6 +291,8 @@ def decode_block_arrays(
     out = jnp.where(tok_mask, out, PAD_BASE).astype(jnp.int8)
 
     n_reads = row[D["n_reads"]]
+    if valid is not None:
+        n_reads = n_reads * valid
     read_mask = jnp.arange(R, dtype=jnp.int32) < n_reads
     return {
         "tokens": out,
@@ -279,16 +312,30 @@ def decode_block_arrays(
 
 @dataclasses.dataclass
 class DeviceBlocks:
-    """Fixed-shape, block-major device layout of a SageFile."""
+    """Fixed-shape, block-major layout of a SageFile.
 
-    arrays: dict[str, np.ndarray]  # name -> (n_blocks, cap_words) uint32 (+dir/cons)
+    ``arrays`` holds host numpy right after :func:`prepare_device_blocks`;
+    :meth:`to_device` moves every array to the accelerator exactly once
+    (``jax.device_put``), after which ranged reads gather and decode with no
+    host↔device traffic (the SageStore LRU caches the resident copy).
+    """
+
+    arrays: dict[str, Any]  # name -> (n_blocks, cap_words) uint32 (+dir/cons)
     caps: Any
     classes: dict[str, tuple[int, ...]]
     fixed_len: int
     n_blocks: int
+    on_device: bool = False
 
-    def block(self, bi: int) -> dict[str, np.ndarray]:
+    def block(self, bi: int) -> dict[str, Any]:
         return {k: v[bi] for k, v in self.arrays.items()}
+
+    def to_device(self, device=None) -> "DeviceBlocks":
+        """Device-resident copy of this DeviceBlocks (no-op when resident)."""
+        if self.on_device:
+            return self
+        arrays = jax.device_put(dict(self.arrays), device)
+        return dataclasses.replace(self, arrays=arrays, on_device=True)
 
 
 def _cap_words(sf: SageFile, s: str) -> int:
@@ -296,32 +343,39 @@ def _cap_words(sf: SageFile, s: str) -> int:
     return max(2, (blk_bits + 31) // 32 + 1)
 
 
+def _gather_rows(src: np.ndarray, starts: np.ndarray, width: int) -> np.ndarray:
+    """(n,) word offsets -> (n, width) rows of ``src``, zero-filled past the
+    end of the stream — one fancy-indexed gather, no per-row Python loop."""
+    if src.size == 0:  # absent stream (e.g. leng/lena on fixed-length files)
+        return np.zeros((starts.size, width), dtype=np.uint32)
+    idx = starts[:, None] + np.arange(width, dtype=np.int64)[None, :]
+    ok = idx < src.size
+    out = src[np.where(ok, idx, 0)]
+    out[~ok] = 0
+    return out
+
+
 def prepare_device_blocks(sf: SageFile) -> DeviceBlocks:
+    """Pack a SageFile into fixed-shape block-major arrays (host numpy).
+
+    Fully vectorized: each stream is one strided gather over the flat
+    bitstream (per-block word offsets come straight from the directory), so
+    preparation costs a memcpy, not a Python loop over blocks × streams."""
     nb = sf.meta.n_blocks
     caps = sf.meta.caps
     arrays: dict[str, np.ndarray] = {}
     for s in STREAMS:
-        cw = _cap_words(sf, s)
-        buf = np.zeros((nb, cw), dtype=np.uint32)
-        src = sf.streams[s]
-        for bi in range(nb):
-            off = int(sf.directory[bi, D[f"off_{s}"]]) >> 5  # word aligned
-            take = min(cw, max(src.size - off, 0))
-            if take > 0:
-                buf[bi, :take] = src[off : off + take]
-        arrays[s] = buf
+        offs = (sf.directory[:, D[f"off_{s}"]] >> 5).astype(np.int64)  # word aligned
+        arrays[s] = _gather_rows(
+            np.ascontiguousarray(sf.streams[s], dtype=np.uint32), offs, _cap_words(sf, s)
+        )
     # consensus windows (2-bit packed, 16 bases/word)
-    ww = caps.window // 16
-    cons = np.zeros((nb, ww), dtype=np.uint32)
-    for bi in range(nb):
-        w0 = int(sf.directory[bi, D["cons_start"]]) // 16
-        take = min(ww, max(sf.consensus2b.size - w0, 0))
-        if take > 0:
-            cons[bi, :take] = sf.consensus2b[w0 : w0 + take]
-    arrays["cons"] = cons
+    w0 = (sf.directory[:, D["cons_start"]] // 16).astype(np.int64)
+    arrays["cons"] = _gather_rows(
+        np.ascontiguousarray(sf.consensus2b, dtype=np.uint32), w0, caps.window // 16
+    )
     # block-local directory (int32-safe: offsets are per-block word slices)
-    dir32 = np.zeros((nb, sf.directory.shape[1]), dtype=np.int32)
-    dir32[:] = np.clip(sf.directory, -(2**31), 2**31 - 1)
+    dir32 = np.clip(sf.directory, -(2**31), 2**31 - 1).astype(np.int32)
     # base_pos must be block-local before casting (genome may exceed int32)
     dir32[:, D["base_pos"]] = (sf.directory[:, D["base_pos"]] - sf.directory[:, D["cons_start"]]).astype(np.int32)
     arrays["dir"] = dir32
@@ -336,17 +390,124 @@ def prepare_device_blocks(sf: SageFile) -> DeviceBlocks:
 
 @functools.partial(jax.jit, static_argnames=("caps", "classes", "fixed_len"))
 def _decode_all_jit(arrays, caps, classes, fixed_len):
+    TRACE_COUNTS["decode_vmap"] += 1
     classes = {k: tuple(v) for k, v in classes}
     return jax.vmap(
         lambda blk: decode_block_arrays(blk, caps=caps, classes=classes, fixed_len=fixed_len)
     )(arrays)
 
 
+def _decode_arrays_vmap(arrays, db: DeviceBlocks) -> dict[str, jax.Array]:
+    """Dispatch block-major arrays to the jitted vmap decoder — the single
+    builder of the jit static key (hashable caps + normalized classes)."""
+    classes_h = tuple(sorted((k, tuple(v)) for k, v in db.classes.items()))
+    return _decode_all_jit(arrays, _HashableCaps(db.caps), classes_h, db.fixed_len)
+
+
 def decode_file_jax(db: DeviceBlocks) -> dict[str, jax.Array]:
     """Decode every block of a prepared SageFile (vmapped, jitted)."""
-    classes_h = tuple(sorted((k, tuple(v)) for k, v in db.classes.items()))
-    caps_h = _HashableCaps(db.caps)
-    return _decode_all_jit(db.arrays, caps_h, classes_h, db.fixed_len)
+    return _decode_arrays_vmap(db.arrays, db)
+
+
+# --------------------------------------------------------------------------
+# shape-bucketed ranged decode (the compile-once serving hot path)
+# --------------------------------------------------------------------------
+# A jitted decoder specializes on the leading block dimension, so serving
+# arbitrary block ranges naively compiles once per *range length*. Instead we
+# pad every requested range up to the next power-of-two bucket and thread a
+# per-lane validity mask through the decoder: the jit cache then holds at
+# most one entry per bucket (log2 of the largest range), and any mix of
+# range lengths reuses those entries.
+
+def bucket_size(n: int) -> int:
+    """Smallest power-of-two bucket holding ``n`` blocks (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"cannot bucket {n} blocks")
+    return 1 << (n - 1).bit_length()
+
+
+def pad_block_ids(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Pad ``ids`` to its bucket: returns (padded ids, int32 validity mask).
+
+    Pad lanes repeat ``ids[0]`` (any in-bounds block works — the mask makes
+    their decode output deterministic PAD/zeros)."""
+    ids = np.asarray(ids, dtype=np.int64)
+    n = ids.size
+    b = bucket_size(n)
+    padded = np.full(b, ids[0], dtype=np.int64)
+    padded[:n] = ids
+    valid = (np.arange(b) < n).astype(np.int32)
+    return padded, valid
+
+
+@jax.jit
+def _gather_blocks_jit(arrays, ids, valid):
+    """On-device block gather: block-major subset of every prepared array
+    plus the (B, 1) validity column the masked decoders consume."""
+    TRACE_COUNTS["gather"] += 1
+    sub = {k: v[ids] for k, v in arrays.items()}
+    sub["valid"] = valid[:, None].astype(jnp.int32)
+    return sub
+
+
+def gather_block_arrays(db: DeviceBlocks, ids: np.ndarray, valid: np.ndarray) -> dict[str, jax.Array]:
+    """Gather a padded block-id set out of prepared arrays, on device."""
+    return _gather_blocks_jit(db.arrays, jnp.asarray(ids, jnp.int32), jnp.asarray(valid, jnp.int32))
+
+
+def decode_blocks_padded(
+    db: DeviceBlocks,
+    ids: np.ndarray,
+    valid: np.ndarray,
+    *,
+    decoder: Optional[Callable[[dict[str, jax.Array]], dict[str, jax.Array]]] = None,
+) -> dict[str, jax.Array]:
+    """Decode an already-padded block-id set; returns padded-length outputs.
+
+    ``decoder`` maps gathered block arrays -> decode dict (defaults to the
+    jitted vmap path). Missing per-block counts (the Pallas kernel emits
+    token/read planes only) are filled from the resident ``dir`` array — no
+    host-side directory indexing on the hot path."""
+    sub = gather_block_arrays(db, ids, valid)
+    out = dict(_decode_arrays_vmap(sub, db) if decoder is None else decoder(sub))
+    if "n_reads" not in out:
+        v = sub["valid"][:, 0]
+        out["n_reads"] = sub["dir"][:, D["n_reads"]] * v
+        out["n_tokens"] = sub["dir"][:, D["n_tokens"]] * v
+    return out
+
+
+def decode_blocks_bucketed(
+    db: DeviceBlocks,
+    ids: np.ndarray,
+    *,
+    decoder: Optional[Callable[[dict[str, jax.Array]], dict[str, jax.Array]]] = None,
+    postprocess: Optional[Callable[[dict[str, jax.Array]], dict[str, jax.Array]]] = None,
+) -> dict[str, jax.Array]:
+    """Bucketed ranged decode: pad ``ids`` to its power-of-two bucket, decode
+    on device, and slice the outputs back to ``len(ids)``. Bit-identical to
+    decoding exactly ``ids``, but compiles once per bucket instead of once
+    per range length.
+
+    ``postprocess`` (e.g. output formatting) runs on the decode dict at the
+    *padded* bucket shape, so anything it jits buckets identically instead
+    of specializing on the requested range length."""
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.size == 0:  # zero-block datasets/ranges: nothing to pad or decode
+        R, C = db.caps.segs, db.caps.tokens
+        out = {"tokens": jnp.zeros((0, C), jnp.int8),
+               "n_tokens": jnp.zeros((0,), jnp.int32),
+               "n_reads": jnp.zeros((0,), jnp.int32)}
+        for k in ("read_pos", "read_rev", "read_start", "read_len", "read_corner"):
+            out[k] = jnp.zeros((0, R), jnp.int32)
+        return postprocess(out) if postprocess is not None else out
+    padded, valid = pad_block_ids(ids)
+    out = decode_blocks_padded(db, padded, valid, decoder=decoder)
+    if postprocess is not None:
+        out = postprocess(out)
+    if padded.size == ids.size:
+        return out
+    return {k: v[: ids.size] for k, v in out.items()}
 
 
 class _HashableCaps:

@@ -22,6 +22,7 @@ the session uses it.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import queue
 import threading
 from collections import OrderedDict
@@ -32,9 +33,10 @@ import jax
 import numpy as np
 
 from repro.core.api import apply_format, get_format
+from repro.core.bitio import unpack_2bit_batch
 from repro.core.decode_jax import (
     DeviceBlocks,
-    decode_file_jax,
+    decode_blocks_bucketed,
     prepare_device_blocks,
 )
 from repro.core.encoder import SageEncoder
@@ -45,13 +47,18 @@ BlockRange = Union[None, int, tuple, Sequence[int]]
 
 def slice_device_blocks(db: DeviceBlocks, ids: np.ndarray) -> DeviceBlocks:
     """A DeviceBlocks view holding only the selected blocks (block-major
-    gather; blocks decode independently, so any subset is decodable)."""
+    gather; blocks decode independently, so any subset is decodable).
+
+    Compat helper for code that wants a standalone sub-file; the serving hot
+    path instead gathers on device through the shape-bucketed
+    :func:`repro.core.decode_jax.decode_blocks_padded`."""
     return DeviceBlocks(
         arrays={k: v[ids] for k, v in db.arrays.items()},
         caps=db.caps,
         classes=db.classes,
         fixed_len=db.fixed_len,
         n_blocks=len(ids),
+        on_device=db.on_device,
     )
 
 
@@ -128,12 +135,16 @@ class SageStore:
             return self._files[name]
 
     def prepared(self, name: str) -> DeviceBlocks:
-        """Prepared DeviceBlocks for ``name`` (LRU-cached)."""
+        """Device-resident DeviceBlocks for ``name`` (LRU-cached).
+
+        Preparation (host gather) and upload (``jax.device_put``) happen
+        once per LRU residency; every subsequent read gathers and decodes
+        entirely on device."""
         with self._lock:
             if name in self._prepared:
                 self._prepared.move_to_end(name)
                 return self._prepared[name]
-            db = prepare_device_blocks(self.file(name))
+            db = prepare_device_blocks(self.file(name)).to_device()
             self._prepared[name] = db
             while len(self._prepared) > self.max_prepared:
                 self._prepared.popitem(last=False)
@@ -147,15 +158,21 @@ class SageStore:
 
         Returns ``(windows, starts)``: windows is (len(ids), caps.window) int8;
         starts is the global consensus coordinate of each window's base 0
-        (for localizing the decoder's global ``read_pos``)."""
-        from repro.core.bitio import unpack_2bit
-
+        (for localizing the decoder's global ``read_pos``). One batched
+        unpack over the prepared ``cons`` rows — the only host transfer is
+        the selected rows themselves."""
         db = self.prepared(name)
         ids = np.asarray(ids, dtype=np.int64)
-        wins = np.stack(
-            [unpack_2bit(db.arrays["cons"][int(b)], db.caps.window).astype(np.int8) for b in ids]
-        )
-        starts = db.arrays["dir"][ids, D["cons_start"]].astype(np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= db.n_blocks):
+            # device arrays clamp out-of-bounds gathers; keep the host
+            # numpy contract of refusing bad block ids
+            raise IndexError(
+                f"block ids {ids} out of bounds for dataset {name!r} "
+                f"({db.n_blocks} blocks)"
+            )
+        rows = np.asarray(db.arrays["cons"][ids])
+        wins = unpack_2bit_batch(rows, db.caps.window).astype(np.int8)
+        starts = np.asarray(db.arrays["dir"][ids, D["cons_start"]]).astype(np.int64)
         return wins, starts
 
     def session(self, *, use_pallas: bool = False, interpret: bool = True) -> "SageReadSession":
@@ -196,14 +213,17 @@ class SageReadSession:
             raise ValueError(f"block ids {ids} out of bounds for dataset {name!r} ({nb} blocks)")
         return ids
 
-    def _decode(self, db: DeviceBlocks) -> dict[str, jax.Array]:
-        if self.use_pallas:
-            from repro.kernels.sage_decode import sage_decode_pallas
+    def _decoder(self, db: DeviceBlocks) -> Optional[Callable]:
+        """Per-session decode callback for the bucketed hot path (None =
+        the jitted vmap reference)."""
+        if not self.use_pallas:
+            return None
+        from repro.kernels.sage_decode import sage_decode_arrays
 
-            out = dict(sage_decode_pallas(db, interpret=self.interpret))
-        else:
-            out = dict(decode_file_jax(db))
-        return out
+        return functools.partial(
+            sage_decode_arrays, caps=db.caps, classes=db.classes,
+            fixed_len=db.fixed_len, interpret=self.interpret,
+        )
 
     def read(
         self,
@@ -216,17 +236,22 @@ class SageReadSession:
         """SAGe_Read: decode a block range of ``name`` to ``fmt``.
 
         Returns the block-major decode dict (tokens, read_* metadata,
-        n_reads/n_tokens) plus the format's output key and ``block_ids``."""
+        n_reads/n_tokens) plus the format's output key and ``block_ids``.
+
+        Hot-path shape: block ids are padded to their power-of-two bucket,
+        gathered out of the device-resident prepared arrays on device, and
+        decoded/formatted at the bucket shape (so the jitted decoder and
+        format kernels compile once per bucket, not once per range length);
+        the padding lanes are masked through decode and sliced off at the
+        end (``decode_blocks_bucketed`` owns the pad/slice invariant)."""
         ids = self.resolve_blocks(name, block_range)
         db = self.store.prepared(name)
-        out = self._decode(slice_device_blocks(db, ids))
-        if "n_reads" not in out:  # the Pallas kernel emits OUT_KEYS only
-            sf = self.store.file(name)
-            out["n_reads"] = np.asarray(sf.directory[ids, D["n_reads"]], dtype=np.int32)
-            out["n_tokens"] = np.asarray(sf.directory[ids, D["n_tokens"]], dtype=np.int32)
-        apply_format(
-            out, fmt, kmer_k=kmer_k, use_pallas=self.use_pallas,
-            interpret=self.interpret, context=f"SAGe_Read({name!r})",
+        out = decode_blocks_bucketed(
+            db, ids, decoder=self._decoder(db),
+            postprocess=lambda dec: apply_format(
+                dec, fmt, kmer_k=kmer_k, use_pallas=self.use_pallas,
+                interpret=self.interpret, context=f"SAGe_Read({name!r})",
+            ),
         )
         out["block_ids"] = ids
         return out

@@ -6,7 +6,9 @@ Converts decoded base tokens into the accelerator's desired format:
   * one-hot bf16 planes (the [106]-style format)
 
 Grid tiles the flat token stream; each step handles one (blocks_per_step ×
-TILE) slab in VMEM. Trivially parallel, MXU-free, VPU-bound.
+TILE) slab in VMEM. Trivially parallel, MXU-free, VPU-bound. Like the decode
+kernel, each ``pallas_call`` is built once per shape signature and wrapped in
+``jax.jit`` so the store's bucketed reads never re-lower the formatter.
 """
 
 from __future__ import annotations
@@ -18,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.api import kmer_special_ids
-from repro.core.decode_jax import PAD_BASE
+from repro.core.decode_jax import PAD_BASE, TRACE_COUNTS
 
 
 def _kmer_kernel(k: int, tok_ref, out_ref):
@@ -37,10 +39,9 @@ def _kmer_kernel(k: int, tok_ref, out_ref):
     out_ref[0] = ids
 
 
-def kmer_pack_pallas(tokens: jax.Array, k: int, *, interpret: bool = True) -> jax.Array:
-    """tokens: (nb, C) int8 -> (nb, C//k) int32."""
-    nb, C = tokens.shape
-    fn = pl.pallas_call(
+@functools.lru_cache(maxsize=64)
+def _build_kmer_pack(nb: int, C: int, k: int, interpret: bool):
+    call = pl.pallas_call(
         functools.partial(_kmer_kernel, k),
         grid=(nb,),
         in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
@@ -48,7 +49,21 @@ def kmer_pack_pallas(tokens: jax.Array, k: int, *, interpret: bool = True) -> ja
         out_shape=jax.ShapeDtypeStruct((nb, C // k), jnp.int32),
         interpret=interpret,
     )
-    return fn(tokens)
+
+    @jax.jit
+    def run(tokens):
+        TRACE_COUNTS["format_kmer_pallas"] += 1
+        return call(tokens)
+
+    return run
+
+
+def kmer_pack_pallas(tokens: jax.Array, k: int, *, interpret: bool = True) -> jax.Array:
+    """tokens: (nb, C) int8 -> (nb, C//k) int32."""
+    nb, C = tokens.shape
+    if nb == 0:  # a grid of zero steps cannot be built (or run)
+        return jnp.zeros((0, C // k), jnp.int32)
+    return _build_kmer_pack(nb, C, k, interpret)(tokens)
 
 
 def _onehot_kernel(tok_ref, out_ref):
@@ -56,10 +71,9 @@ def _onehot_kernel(tok_ref, out_ref):
     out_ref[0] = (t[:, None] == jnp.arange(4, dtype=jnp.int32)[None, :]).astype(out_ref.dtype)
 
 
-def one_hot_pallas(tokens: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """tokens: (nb, C) int8 -> (nb, C, 4) bf16 (PAD rows all-zero)."""
-    nb, C = tokens.shape
-    fn = pl.pallas_call(
+@functools.lru_cache(maxsize=64)
+def _build_one_hot(nb: int, C: int, interpret: bool):
+    call = pl.pallas_call(
         _onehot_kernel,
         grid=(nb,),
         in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
@@ -67,4 +81,18 @@ def one_hot_pallas(tokens: jax.Array, *, interpret: bool = True) -> jax.Array:
         out_shape=jax.ShapeDtypeStruct((nb, C, 4), jnp.bfloat16),
         interpret=interpret,
     )
-    return fn(tokens)
+
+    @jax.jit
+    def run(tokens):
+        TRACE_COUNTS["format_onehot_pallas"] += 1
+        return call(tokens)
+
+    return run
+
+
+def one_hot_pallas(tokens: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """tokens: (nb, C) int8 -> (nb, C, 4) bf16 (PAD rows all-zero)."""
+    nb, C = tokens.shape
+    if nb == 0:  # a grid of zero steps cannot be built (or run)
+        return jnp.zeros((0, C, 4), jnp.bfloat16)
+    return _build_one_hot(nb, C, interpret)(tokens)

@@ -7,6 +7,13 @@ decodes with the data-parallel scan math of
 :func:`repro.core.decode_jax.decode_block_arrays` (single source of truth,
 shared with the vmap reference), and writes the token tile back.
 
+Serving contract: the ``pallas_call`` is built once per (capacities,
+classes, block-count, stream-shapes) signature — an ``lru_cache``-ed
+builder wraps it in ``jax.jit`` so repeated ranged reads reuse one
+compiled executable (the store's shape buckets keep the set of signatures
+small). An optional ``valid`` input column carries the bucket-padding mask
+into the kernel; invalid lanes emit deterministic PAD/zero planes.
+
 VMEM sizing (the BlockSpec contract): with the default data-pipeline block
 capacity (tokens<=16Ki, window<=1Mi bases), one grid step's working set is
   streams:      <= ~0.2 MiB (compressed bits)
@@ -28,7 +35,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.decode_jax import DeviceBlocks, decode_block_arrays
+from repro.core.decode_jax import (
+    TRACE_COUNTS,
+    DeviceBlocks,
+    _HashableCaps,
+    decode_block_arrays,
+)
 from repro.core.format import STREAMS
 
 OUT_KEYS = ("tokens", "read_pos", "read_rev", "read_start", "read_len", "read_corner")
@@ -43,19 +55,13 @@ def _kernel(caps, classes, fixed_len, names, *refs):
         oref[0] = dec[key].astype(oref.dtype)
 
 
-def sage_decode_pallas(db: DeviceBlocks, *, interpret: bool = True):
-    """Decode all blocks of a prepared SageFile with one pallas_call."""
-    caps = db.caps
-    classes = {k: tuple(v) for k, v in db.classes.items()}
-    nb = db.n_blocks
+@functools.lru_cache(maxsize=64)
+def _build_pallas_decode(caps_h, classes_key, fixed_len, nb, shapes, names, interpret):
+    """One jitted pallas_call per decode signature, reused across reads."""
+    caps = caps_h
+    classes = {k: tuple(v) for k, v in classes_key}
     R, C = caps.segs, caps.tokens
-
-    names = list(STREAMS) + ["cons", "dir"]
-    arrays = [jnp.asarray(db.arrays[n]) for n in names]
-
-    in_specs = [
-        pl.BlockSpec((1, a.shape[1]), lambda i: (i, 0)) for a in arrays
-    ]
+    in_specs = [pl.BlockSpec((1, w), lambda i: (i, 0)) for w in shapes]
     out_shapes = [
         jax.ShapeDtypeStruct((nb, C), jnp.int8),  # tokens
         jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_pos
@@ -65,14 +71,50 @@ def sage_decode_pallas(db: DeviceBlocks, *, interpret: bool = True):
         jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_corner
     ]
     out_specs = [pl.BlockSpec((1, s.shape[1]), lambda i: (i, 0)) for s in out_shapes]
-
-    fn = pl.pallas_call(
-        functools.partial(_kernel, caps, classes, db.fixed_len, names),
+    call = pl.pallas_call(
+        functools.partial(_kernel, caps, classes, fixed_len, names),
         grid=(nb,),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
     )
-    outs = fn(*arrays)
-    return dict(zip(OUT_KEYS, outs))
+
+    @jax.jit
+    def run(*arrays):
+        TRACE_COUNTS["decode_pallas"] += 1
+        return call(*arrays)
+
+    return run
+
+
+def sage_decode_arrays(
+    arrays: dict[str, jax.Array],
+    *,
+    caps,
+    classes: dict[str, tuple[int, ...]],
+    fixed_len: int,
+    interpret: bool = True,
+) -> dict[str, jax.Array]:
+    """Decode block-major stream arrays (as gathered by the store's bucketed
+    hot path) with the Pallas kernel. An optional ``arrays["valid"]`` column
+    masks bucket-padding lanes per the decode_block_arrays contract."""
+    names = list(STREAMS) + ["cons", "dir"]
+    if "valid" in arrays:
+        names.append("valid")
+    ins = [jnp.asarray(arrays[n]) for n in names]
+    nb = ins[0].shape[0]
+    classes_key = tuple(sorted((k, tuple(v)) for k, v in classes.items()))
+    run = _build_pallas_decode(
+        _HashableCaps(caps), classes_key, fixed_len, nb,
+        tuple(a.shape[1] for a in ins), tuple(names), interpret,
+    )
+    return dict(zip(OUT_KEYS, run(*ins)))
+
+
+def sage_decode_pallas(db: DeviceBlocks, *, interpret: bool = True):
+    """Decode all blocks of a prepared SageFile with one pallas_call."""
+    return sage_decode_arrays(
+        db.arrays, caps=db.caps, classes=db.classes,
+        fixed_len=db.fixed_len, interpret=interpret,
+    )

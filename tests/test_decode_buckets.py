@@ -1,0 +1,175 @@
+"""Compile-once bucketed decode: the serving hot path's shape contract.
+
+Covers the acceptance criteria of the device-resident read path: prepared
+state is uploaded once and stays on device; reads of differing range lengths
+within one power-of-two bucket do NOT retrace the jitted decoder (asserted
+via the trace counters that every jitted hot-path entry point bumps at trace
+time); bucketed+masked decode output is bit-identical to the unbucketed
+vmap reference; and the mask contract holds (padding lanes decode to
+deterministic PAD/zero planes).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import SageStore, reset_trace_counts, trace_counts
+from repro.core.decode_jax import (
+    PAD_BASE,
+    bucket_size,
+    decode_blocks_bucketed,
+    decode_blocks_padded,
+    decode_file_jax,
+    pad_block_ids,
+    prepare_device_blocks,
+)
+
+
+@pytest.fixture(scope="module")
+def bucket_store():
+    from repro.genomics.synth import make_reference, sample_read_set
+
+    ref = make_reference(30_000, seed=70)
+    rs = sample_read_set(ref, "illumina", depth=3, seed=71)
+    store = SageStore(max_prepared=2)
+    # token_target chosen odd-of-the-usual so this module's decoder shapes
+    # don't collide with jit cache entries created by other test modules
+    sf = store.write("ds", rs, ref, token_target=3072)
+    assert sf.meta.n_blocks >= 9, "need enough blocks to span several buckets"
+    return store
+
+
+def test_bucket_size_is_next_power_of_two():
+    assert [bucket_size(n) for n in (1, 2, 3, 4, 5, 7, 8, 9, 31)] == [
+        1, 2, 4, 4, 8, 8, 8, 16, 32,
+    ]
+    with pytest.raises(ValueError):
+        bucket_size(0)
+
+
+def test_pad_block_ids_masks_tail():
+    ids, valid = pad_block_ids(np.asarray([5, 2, 7]))
+    assert ids.tolist() == [5, 2, 7, 5] and valid.tolist() == [1, 1, 1, 0]
+    ids, valid = pad_block_ids(np.asarray([3, 1]))  # already a bucket
+    assert ids.tolist() == [3, 1] and valid.tolist() == [1, 1]
+
+
+def test_prepared_state_is_device_resident(bucket_store):
+    db = bucket_store.prepared("ds")
+    assert db.on_device
+    assert all(isinstance(v, jax.Array) for v in db.arrays.values())
+    assert bucket_store.prepared("ds") is db  # LRU returns the same residency
+
+
+def test_consensus_windows_rejects_out_of_bounds_ids(bucket_store):
+    """Device arrays clamp bad gathers; the store must still refuse them."""
+    nb = bucket_store.n_blocks("ds")
+    with pytest.raises(IndexError):
+        bucket_store.consensus_windows("ds", [nb + 100])
+    with pytest.raises(IndexError):
+        bucket_store.consensus_windows("ds", [-1])
+
+
+def test_same_bucket_lengths_do_not_retrace(bucket_store):
+    sess = bucket_store.session()
+    sess.read("ds", (0, 3))  # warm the size-4 bucket (and its gather)
+    reset_trace_counts()
+    sess.read("ds", (2, 6))  # length 4, same bucket
+    sess.read("ds", [8, 1, 5])  # length 3, same bucket, fancy ids
+    sess.read("ds", (1, 4))  # length 3 again
+    counts = trace_counts()
+    assert counts.get("decode_vmap", 0) == 0, counts
+    assert counts.get("gather", 0) == 0, counts
+    reset_trace_counts()
+    sess.read("ds", (0, 5))  # length 5 -> size-8 bucket: exactly one retrace
+    sess.read("ds", (1, 8))  # length 7, same new bucket
+    counts = trace_counts()
+    assert counts.get("decode_vmap", 0) == 1, counts
+
+
+def test_mixed_range_workload_compiles_at_most_once_per_bucket(bucket_store):
+    store = bucket_store
+    sess = store.session()
+    nb = store.n_blocks("ds")
+    lengths = [1 + (i * 3) % (nb - 1) for i in range(20)]
+    reset_trace_counts()
+    for ln in lengths:
+        sess.read("ds", (0, ln))
+    buckets = {bucket_size(ln) for ln in lengths}
+    compiles = trace_counts().get("decode_vmap", 0)
+    assert compiles <= len(buckets), (compiles, buckets)
+    assert len(set(lengths)) > len(buckets)  # the workload is actually mixed
+
+
+def test_bucketed_decode_bit_identical_to_unbucketed(bucket_store):
+    sf = bucket_store.file("ds")
+    db = prepare_device_blocks(sf)
+    ref = decode_file_jax(db)
+    ids = np.asarray([6, 0, 3, 2, 5])  # length 5 -> padded to 8
+    out = decode_blocks_bucketed(db.to_device(), ids)
+    for key in ("tokens", "n_tokens", "read_pos", "read_rev", "read_start",
+                "read_len", "read_corner", "n_reads"):
+        np.testing.assert_array_equal(
+            np.asarray(out[key]), np.asarray(ref[key])[ids], err_msg=key
+        )
+
+
+def test_mask_contract_invalid_lanes_are_deterministic_pad(bucket_store):
+    db = bucket_store.prepared("ds")
+    # same ids, two different pad occupants -> identical padded outputs
+    ids_a = np.asarray([2, 4, 1, 0], dtype=np.int64)
+    ids_b = np.asarray([2, 4, 1, 7], dtype=np.int64)
+    valid = np.asarray([1, 1, 1, 0], dtype=np.int32)
+    out_a = decode_blocks_padded(db, ids_a, valid)
+    out_b = decode_blocks_padded(db, ids_b, valid)
+    for key in out_a:
+        np.testing.assert_array_equal(
+            np.asarray(out_a[key]), np.asarray(out_b[key]), err_msg=key
+        )
+    pad_lane = 3
+    assert (np.asarray(out_a["tokens"])[pad_lane] == PAD_BASE).all()
+    assert int(np.asarray(out_a["n_reads"])[pad_lane]) == 0
+    assert int(np.asarray(out_a["n_tokens"])[pad_lane]) == 0
+    assert (np.asarray(out_a["read_pos"])[pad_lane] == -1).all()
+    assert (np.asarray(out_a["read_len"])[pad_lane] == 0).all()
+
+
+def test_pallas_bucketed_matches_vmap_bucketed(bucket_store):
+    vm = bucket_store.session().read("ds", (2, 7))
+    pl = bucket_store.session(use_pallas=True).read("ds", (2, 7))
+    for key in ("tokens", "read_pos", "read_start", "read_len", "n_reads", "n_tokens"):
+        np.testing.assert_array_equal(
+            np.asarray(pl[key]), np.asarray(vm[key]), err_msg=key
+        )
+
+
+def test_zero_block_dataset_reads_empty():
+    """An empty read set encodes to n_blocks=0 and must read back as empty
+    arrays (the pre-bucketing behavior), not a bucketing error."""
+    from repro.core import sage_read, sage_write
+    from repro.genomics.synth import ReadSet, make_reference
+
+    ref = make_reference(4_000, seed=72)
+    sf = sage_write(ReadSet(reads=[], quals=[], kind="short", profile="illumina"),
+                    ref, token_target=2048)
+    assert sf.meta.n_blocks == 0
+    out = sage_read(sf)
+    assert np.asarray(out["tokens"]).shape[0] == 0
+    store = SageStore()
+    store.register("empty", sf)
+    for use_pallas in (False, True):
+        out = store.session(use_pallas=use_pallas).read("empty", fmt="kmer", kmer_k=4)
+        assert np.asarray(out["n_reads"]).size == 0
+        assert np.asarray(out["kmer"]).shape[0] == 0
+
+
+def test_pallas_repeat_reads_do_not_rebuild_kernel(bucket_store):
+    sess = bucket_store.session(use_pallas=True)
+    sess.read("ds", (0, 3))  # warm the size-4 bucket
+    reset_trace_counts()
+    sess.read("ds", (4, 8))  # length 4, same bucket
+    sess.read("ds", (1, 3))  # length 2... different bucket? no: bucket 2
+    counts = trace_counts()
+    # the length-4 read must reuse the compiled pallas decode
+    assert counts.get("decode_pallas", 0) <= 1, counts

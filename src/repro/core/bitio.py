@@ -15,12 +15,30 @@ import numpy as np
 __all__ = [
     "BitWriter",
     "pack_bits",
+    "ranges_from_counts",
     "unpack_fields",
     "unpack_bits",
     "pack_2bit",
     "unpack_2bit",
     "unpack_2bit_batch",
 ]
+
+
+def ranges_from_counts(counts: np.ndarray) -> np.ndarray:
+    """``[0..c0), [0..c1), ...`` concatenated — the gather companion of
+    ``np.repeat``, built from one cumsum (no per-count ``np.arange`` loop).
+
+    Used by the vectorized encode path (minimizer hit expansion, batched
+    read slicing) wherever a variable-length range per row must become one
+    flat index array. Empty counts yield an empty array."""
+    counts = np.asarray(counts, dtype=np.int64)
+    if counts.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    ends = np.cumsum(counts)
+    total = int(ends[-1])
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    return np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
 
 
 class BitWriter:
@@ -69,21 +87,25 @@ class BitWriter:
         return np.asarray(out, dtype=np.uint32)
 
 
-def pack_bits(values: np.ndarray, widths: np.ndarray) -> tuple[np.ndarray, int]:
+def pack_bits(values: np.ndarray, widths) -> tuple[np.ndarray, int]:
     """Pack variable-width fields into a uint32 little-endian bitstream.
 
     Fully vectorized: splits every field into (up to) three byte-aligned
-    contributions and scatter-ORs them into a byte buffer.
+    contributions and scatter-ORs them into a byte buffer. ``widths`` may be
+    a per-field array or a single int applied to every field (the common
+    fixed-width-stream case — saves the caller a ``np.full`` per block).
     Returns (words_uint32, total_bits).
     """
     values = np.asarray(values, dtype=np.uint64).ravel()
+    if np.isscalar(widths) or np.ndim(widths) == 0:
+        widths = np.full(values.size, int(widths), dtype=np.int64)
     widths = np.asarray(widths, dtype=np.int64).ravel()
     if values.size == 0:
         return np.zeros(0, dtype=np.uint32), 0
     if np.any(widths < 0) or np.any(widths > 32):
         raise ValueError("widths must be in [0, 32]")
     mask = (np.uint64(1) << widths.astype(np.uint64)) - np.uint64(1)
-    np.bitwise_and(values, mask, out=values, where=widths < 64)
+    values = np.bitwise_and(values, mask)  # no in-place: input may be a caller view
     ends = np.cumsum(widths)
     total = int(ends[-1])
     starts = ends - widths

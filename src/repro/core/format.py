@@ -107,6 +107,23 @@ class SageFile:
     directory: np.ndarray  # int64 (n_blocks, NDIR)
     streams: dict[str, np.ndarray]  # uint32 words per stream
 
+    def diff(self, other: "SageFile") -> list[str]:
+        """Names of container sections that differ from ``other`` (empty =
+        bit-identical). The single comparator behind the encoder parity
+        tests and the encode benchmark's CI gate."""
+        probs = []
+        if self.meta.to_json() != other.meta.to_json():
+            probs.append("meta")
+        if not np.array_equal(self.directory, other.directory):
+            probs.append("directory")
+        if not np.array_equal(self.consensus2b, other.consensus2b):
+            probs.append("consensus")
+        probs += [
+            f"stream:{s}" for s in STREAMS
+            if not np.array_equal(self.streams[s], other.streams[s])
+        ]
+        return probs
+
     def compressed_bytes(self, include_consensus: bool = True) -> int:
         n = sum(int(v.nbytes) for v in self.streams.values())
         n += int(self.directory.nbytes)

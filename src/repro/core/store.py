@@ -81,6 +81,7 @@ class SageStore:
         if max_prepared < 1:
             raise ValueError("max_prepared must be >= 1")
         self.max_prepared = max_prepared
+        self.last_write_stats: dict = {}
         self._sources: dict[str, Union[SageFile, str]] = {}
         self._files: dict[str, SageFile] = {}
         self._prepared: "OrderedDict[str, DeviceBlocks]" = OrderedDict()
@@ -100,11 +101,25 @@ class SageStore:
         read_set,
         consensus: np.ndarray,
         token_target: int = 65536,
+        batched: bool = True,
+        verify: bool = True,
         **enc_kwargs,
     ) -> SageFile:
         """SAGe_Write: compress ``read_set`` against ``consensus`` and register
-        the result under ``name``."""
-        sf = SageEncoder(consensus, token_target=token_target, **enc_kwargs).encode(read_set)
+        the result under ``name``.
+
+        ``batched`` selects the vectorized ingest pipeline (batched seeding,
+        vmapped banded align, columnar stream packing) and ``verify`` its
+        decode-round-trip losslessness check; ``batched=False`` runs the
+        sequential reference encoder (bit-identical output, orders of
+        magnitude slower — see ``benchmarks/encode_bench.py``). Encoder
+        phase timings land in ``self.last_write_stats``."""
+        enc = SageEncoder(
+            consensus, token_target=token_target, batched=batched,
+            verify=verify, **enc_kwargs,
+        )
+        sf = enc.encode(read_set)
+        self.last_write_stats = dict(enc.stats)
         self.register(name, sf)
         return sf
 

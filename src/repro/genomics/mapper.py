@@ -80,15 +80,26 @@ class MinimizerIndex:
         return cls(k=k, w=w, hashes=h[order], positions=p[order])
 
     def lookup(self, h: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """For query hashes, return (query_idx, ref_pos) hit pairs."""
+        """For query hashes, return (query_idx, ref_pos) hit pairs.
+
+        Empty-hit paths (no query hashes, an empty index — e.g. built from a
+        reference shorter than ``k`` — or zero matches) return empty arrays
+        instead of raising, and hit expansion is one cumsum
+        (:func:`ranges_from_counts`) rather than a per-count ``np.arange``
+        loop."""
+        from repro.core.bitio import ranges_from_counts  # function-level: genomics must not import core at module scope
+
+        h = np.asarray(h, dtype=np.int64)
+        empty = np.zeros(0, dtype=np.int64)
+        if h.size == 0 or self.hashes.size == 0:
+            return empty, empty
         lo = np.searchsorted(self.hashes, h, side="left")
         hi = np.searchsorted(self.hashes, h, side="right")
         cnt = np.minimum(hi - lo, self.occ_cut)
         qidx = np.repeat(np.arange(h.size), cnt)
         if qidx.size == 0:
-            return qidx, qidx
-        offs = np.concatenate([np.arange(c) for c in cnt]) if cnt.max() > 0 else np.zeros(0, np.int64)
-        rpos = self.positions[np.repeat(lo, cnt) + offs]
+            return empty, empty
+        rpos = self.positions[np.repeat(lo, cnt) + ranges_from_counts(cnt)]
         return qidx, rpos
 
 
@@ -374,27 +385,47 @@ def map_store_reads(
     rep = StoreMappingReport()
 
     def consume(sb) -> None:
+        from repro.core.bitio import ranges_from_counts  # genomics must not import core at module scope
+
         d = sb.data
         toks = np.asarray(d["tokens"])
         n_reads = np.asarray(d["n_reads"])
         starts, lens = np.asarray(d["read_start"]), np.asarray(d["read_len"])
         poss, revs = np.asarray(d["read_pos"]), np.asarray(d["read_rev"])
-        for bi in range(toks.shape[0]):
-            for r in range(int(n_reads[bi])):
-                seq = toks[bi, starts[bi, r] : starts[bi, r] + lens[bi, r]].astype(np.uint8)
-                pos = int(poss[bi, r])
-                if prune_exact and pos >= 0:
-                    cand = consensus[pos : pos + seq.size]
-                    fwd = revcomp(seq) if revs[bi, r] else seq
-                    if cand.size == fwd.size and np.array_equal(cand, fwd):
-                        rep.pruned += 1
-                        rep.total += 1
-                        continue
-                if mapper.map_read(seq) is not None:
-                    rep.mapped += 1
-                else:
-                    rep.unmapped += 1
-                rep.total += 1
+        # ---- batched token extraction: one gather for every read's bases ----
+        # (block-major read order, identical to the former nested loops)
+        nmax = starts.shape[1]
+        sel = np.arange(nmax)[None, :] < n_reads[:, None]
+        bi, ri = np.nonzero(sel)
+        if bi.size == 0:
+            return
+        st = starts[bi, ri].astype(np.int64)
+        ln = lens[bi, ri].astype(np.int64)
+        po = poss[bi, ri].astype(np.int64)
+        rv = revs[bi, ri].astype(bool)
+        off = ranges_from_counts(ln)  # within-read offset of every base
+        rd = np.repeat(np.arange(bi.size), ln)  # read id of every base
+        flat = toks[np.repeat(bi, ln), np.repeat(st, ln) + off].astype(np.uint8)
+        rep.total += int(bi.size)
+        pruned = np.zeros(bi.size, dtype=bool)
+        if prune_exact:
+            ok = (po >= 0) & (po + ln <= consensus.size)
+            # forward-strand base at offset j: seq[j] or revcomp(seq)[j]
+            ln_b, rv_b, ok_b = ln[rd], rv[rd], ok[rd]
+            src = np.repeat(st, ln) + np.where(rv_b, ln_b - 1 - off, off)
+            fwd = toks[np.repeat(bi, ln), src].astype(np.uint8)
+            fwd = np.where(rv_b & (fwd < 4), 3 - fwd, fwd)
+            eq = np.where(ok_b, fwd == consensus[np.where(ok_b, po[rd] + off, 0)], False)
+            cs = np.concatenate([[0], np.cumsum(eq)])
+            ends = np.cumsum(ln)
+            pruned = ok & ((cs[ends] - cs[ends - ln]) == ln)
+            rep.pruned += int(pruned.sum())
+        seqs = np.split(flat, np.cumsum(ln)[:-1])
+        for i in np.nonzero(~pruned)[0]:
+            if mapper.map_read(seqs[i]) is not None:
+                rep.mapped += 1
+            else:
+                rep.unmapped += 1
 
     if block_range is None:
         session.read_stream(

@@ -1,0 +1,144 @@
+"""Batched banded edit-distance DP for the SAGe_Write mapper front-end.
+
+One jitted ``lax.scan`` over DP rows, ``vmap``-ed across a batch of
+same-length reads — the encode-side sibling of the decode kernels: the
+paper's co-design argument (and the GenASM / storage-centric line of work)
+is that alignment must be *batched and offloaded*, not looped per read on
+the host. The recurrence is row-sequential but each row is a width-(2b+1)
+vector op, so a batch of B reads turns L tiny numpy rows into one
+(B, width) device op per row.
+
+Bit-for-bit contract: this computes exactly the recurrence of
+:func:`repro.genomics.mapper.banded_align` (same INF arithmetic, same
+tie-breaking, same band-edge masking) and returns the full move matrix plus
+the final DP row; the host traceback in ``repro.genomics.batch_map`` then
+reproduces the sequential mapper's ops verbatim. Tests assert equality
+against the per-read reference on every mapped read.
+
+Compile behaviour: one trace per (batch-bucket, read-length, band)
+signature — batches are padded to power-of-two lane counts by the caller,
+and band is a function of read length, so a fixed-length dataset compiles
+exactly once (observable via ``repro.core.trace_counts()`` under the
+``align_scan`` key, mirrored by ``benchmarks/encode_bench.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decode_jax import TRACE_COUNTS
+
+INF = 1 << 20  # matches repro.genomics.mapper.banded_align
+
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def _align_scan(reads: jax.Array, wins: jax.Array, off0: jax.Array, wlen: jax.Array, *, band: int):
+    """DP forward pass for a batch of same-length reads.
+
+    reads: (B, L) int32 base codes; wins: (B, Wmax) int32 consensus window
+    (values past ``wlen`` are ignored); off0/wlen: (B,) int32 window anchor
+    and true window length. Returns (moves (B, L, width) uint8,
+    last_row (B, width) int32)."""
+    TRACE_COUNTS["align_scan"] += 1
+    L = reads.shape[1]
+    width = 2 * band + 1
+    inf = jnp.int32(INF)
+
+    def lane(read, win, o0, wl):
+        js0 = o0 - band
+        ar = jnp.arange(width, dtype=jnp.int32)
+
+        def step(prev, x):
+            base, i = x
+            j = (i - 1) + js0 + ar  # window col consumed on diag
+            valid = (j >= 0) & (j < wl)
+            cj = jnp.where(valid, j, 0)
+            match = (win[cj] == base) & (base < 4) & valid
+            diag = prev + jnp.where(match, 0, 1) + jnp.where(valid, 0, inf)
+            up = jnp.concatenate([prev[1:], jnp.full((1,), inf, jnp.int32)]) + 1
+            cur = jnp.minimum(diag, up)
+            mv = jnp.where(up < diag, 1, 0).astype(jnp.uint8)
+            # left (deletion) via prefix-min, lanes gated to in-window cols
+            b_lo = -i - js0 + 1
+            b_hi = wl - i - js0
+            y = jnp.where(ar < b_lo - 1, inf, cur - ar)
+            lft = jax.lax.cummin(y) + ar
+            allowed = (ar >= b_lo) & (ar <= b_hi)
+            lft = jnp.where(allowed, lft, cur)
+            mv = jnp.where(lft < cur, jnp.uint8(2), mv)
+            cur = jnp.minimum(lft, cur)
+            return cur, mv
+
+        prev0 = jnp.zeros((width,), jnp.int32)  # free start anywhere in band
+        xs = (read.astype(jnp.int32), jnp.arange(1, L + 1, dtype=jnp.int32))
+        last, moves = jax.lax.scan(step, prev0, xs)
+        return moves, last
+
+    return jax.vmap(lane)(reads, wins, off0.astype(jnp.int32), wlen.astype(jnp.int32))
+
+
+def _bucket(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
+# Soft cap on one DP call's move-matrix bytes; callers chunk above this so
+# long-read batches don't materialize gigabyte intermediates.
+MOVES_BUDGET_BYTES = 256 << 20
+# Hard cap on lanes per DP call: every full chunk then shares one
+# power-of-two bucket shape, so the jit cache stays small (full-chunk
+# bucket + at most one tail bucket per (L, band)).
+MAX_CHUNK_LANES = 1024
+
+
+def align_rows(
+    rows: np.ndarray, cons: np.ndarray, cand: np.ndarray, band: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Banded DP for every row of ``rows`` (B, L) near ``cand`` (B,).
+
+    Host wrapper: gathers each lane's consensus window with one strided
+    fancy index, pads the batch to a power-of-two lane bucket (so the jit
+    cache holds one entry per (bucket, L, band)), chunks oversized batches,
+    and returns numpy (moves, last_row, ws, off0, wlen). Lanes whose window
+    is empty (W <= 0) must be filtered by the caller beforehand."""
+    rows = np.ascontiguousarray(rows)
+    B, L = rows.shape
+    cand = np.asarray(cand, dtype=np.int64)
+    ws = np.maximum(cand - band, 0)
+    we = np.minimum(int(cons.size), cand + L + band)
+    wlen = (we - ws).astype(np.int32)
+    wmax = L + 2 * band
+    width = 2 * band + 1
+    chunk = max(1, min(MOVES_BUDGET_BYTES // max(L * width, 1), MAX_CHUNK_LANES))
+    moves_parts, last_parts = [], []
+    for s in range(0, B, chunk):
+        r = rows[s : s + chunk]
+        w = ws[s : s + chunk]
+        n = r.shape[0]
+        idx = w[:, None] + np.arange(wmax, dtype=np.int64)[None, :]
+        win = cons[np.clip(idx, 0, cons.size - 1)].astype(np.int32)
+        o0 = (cand[s : s + chunk] - w).astype(np.int32)
+        wl = wlen[s : s + chunk]
+        nb = _bucket(n)
+        if nb != n:  # pad lanes by repeating lane 0; outputs sliced off below
+            pad = nb - n
+            r = np.concatenate([r, np.repeat(r[:1], pad, axis=0)])
+            win = np.concatenate([win, np.repeat(win[:1], pad, axis=0)])
+            o0 = np.concatenate([o0, np.repeat(o0[:1], pad)])
+            wl = np.concatenate([wl, np.repeat(wl[:1], pad)])
+        mv, last = _align_scan(
+            jnp.asarray(r.astype(np.int32)), jnp.asarray(win), jnp.asarray(o0),
+            jnp.asarray(wl), band=band,
+        )
+        moves_parts.append(np.asarray(mv)[:n])
+        last_parts.append(np.asarray(last)[:n])
+    return (
+        np.concatenate(moves_parts) if len(moves_parts) > 1 else moves_parts[0],
+        np.concatenate(last_parts) if len(last_parts) > 1 else last_parts[0],
+        ws,
+        (cand - ws).astype(np.int64),
+        wlen.astype(np.int64),
+    )

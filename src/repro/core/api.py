@@ -64,22 +64,32 @@ def pick_k(vocab_size: int, max_k: int = 8) -> int:
     return k
 
 
-def kmer_pack(tokens: jax.Array, k: int) -> jax.Array:
+def kmer_pack(tokens: jax.Array, k: int, n_tokens: Optional[jax.Array] = None) -> jax.Array:
     """Pack base tokens (.., C) into k-mer ids (.., C//k).
 
-    Any group containing PAD maps to the pad id; containing N (=4 via
-    escape reads) maps to the N-block id. Pure-jnp reference for the
-    reformat kernel."""
+    Code 4 is both PAD (the token axis past each row's real length) and N
+    (dropouts inside escape reads). ``n_tokens`` — the per-row real-token
+    count from the decode dict, shape ``tokens.shape[:-1]`` — disambiguates:
+    a 4-containing group entirely inside ``n_tokens`` maps to the N-block
+    id, while groups at or past the boundary map to the pad id. Pad ids are
+    therefore confined to each row's tail and exactly ``n_tokens // k``
+    leading groups are real — the deterministic per-block k-mer count the
+    streaming pipeline's cursor math and device-side PAD filter rely on.
+
+    Without ``n_tokens`` the two cases are indistinguishable and every
+    4-containing group maps to the pad id (legacy one-shot behavior).
+    Pure-jnp reference for the reformat kernel."""
     C = tokens.shape[-1]
     g = tokens[..., : (C // k) * k].reshape(*tokens.shape[:-1], C // k, k).astype(jnp.int32)
     weights = (4 ** jnp.arange(k, dtype=jnp.int32))[::-1]
     ids = jnp.sum(jnp.where(g > 3, 0, g) * weights, axis=-1)
     sp = kmer_special_ids(k)
-    has_pad = jnp.any(g == PAD_BASE, axis=-1)
-    has_n = jnp.any(g == 4, axis=-1) & ~has_pad  # PAD_BASE == 4 == N code
-    ids = jnp.where(has_pad, sp["pad"], ids)
-    ids = jnp.where(has_n, sp["nblk"], ids)
-    return ids
+    has4 = jnp.any(g == PAD_BASE, axis=-1)  # PAD_BASE == 4 == N code
+    if n_tokens is None:
+        return jnp.where(has4, sp["pad"], ids)
+    gi = jnp.arange(C // k, dtype=jnp.int32)
+    in_read = (gi + 1) * k <= jnp.asarray(n_tokens, jnp.int32)[..., None]
+    return jnp.where(has4, jnp.where(in_read, sp["nblk"], sp["pad"]), ids)
 
 
 def one_hot_bases(tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
@@ -93,9 +103,11 @@ def one_hot_bases(tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
 class FormatSpec:
     """One SAGe_Read output format.
 
-    ``apply(tokens, *, kmer_k, use_pallas, interpret)`` converts decoded base
-    tokens into the format's array; ``None`` means the raw 2-bit tokens are
-    already the answer. New formats register via :func:`register_format`."""
+    ``apply(tokens, *, kmer_k, use_pallas, interpret, n_tokens)`` converts
+    decoded base tokens into the format's array (``n_tokens`` is the decode
+    dict's per-row real-token count, for formats that must tell tail PAD
+    from in-read N); ``None`` means the raw 2-bit tokens are already the
+    answer. New formats register via :func:`register_format`."""
 
     name: str  # registry key (the ``fmt=`` string)
     out_key: str  # key the formatted array appears under in the read result
@@ -104,7 +116,7 @@ class FormatSpec:
     doc: str = ""
 
 
-def _apply_one_hot(tokens, *, kmer_k=None, use_pallas=False, interpret=True):
+def _apply_one_hot(tokens, *, kmer_k=None, use_pallas=False, interpret=True, n_tokens=None):
     if use_pallas:
         from repro.kernels.reformat import one_hot_pallas
 
@@ -112,12 +124,12 @@ def _apply_one_hot(tokens, *, kmer_k=None, use_pallas=False, interpret=True):
     return one_hot_bases(tokens)
 
 
-def _apply_kmer(tokens, *, kmer_k, use_pallas=False, interpret=True):
+def _apply_kmer(tokens, *, kmer_k, use_pallas=False, interpret=True, n_tokens=None):
     if use_pallas:
         from repro.kernels.reformat import kmer_pack_pallas
 
-        return kmer_pack_pallas(tokens, kmer_k, interpret=interpret)
-    return kmer_pack(tokens, kmer_k)
+        return kmer_pack_pallas(tokens, kmer_k, n_tokens, interpret=interpret)
+    return kmer_pack(tokens, kmer_k, n_tokens)
 
 
 _FORMATS: dict[str, FormatSpec] = {}
@@ -162,7 +174,8 @@ def apply_format(
         )
     if spec.apply is not None:
         out[spec.out_key] = spec.apply(
-            out["tokens"], kmer_k=kmer_k, use_pallas=use_pallas, interpret=interpret
+            out["tokens"], kmer_k=kmer_k, use_pallas=use_pallas,
+            interpret=interpret, n_tokens=out.get("n_tokens"),
         )
     return out
 

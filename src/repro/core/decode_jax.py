@@ -32,8 +32,15 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.format import D, STREAMS, SageFile
+from repro.distributed.sharding import (
+    block_axis_name,
+    block_shard_count,
+    block_specs,
+    shard_map,
+)
 
 PAD_BASE = 4  # output padding token
 
@@ -318,6 +325,13 @@ class DeviceBlocks:
     :meth:`to_device` moves every array to the accelerator exactly once
     (``jax.device_put``), after which ranged reads gather and decode with no
     host↔device traffic (the SageStore LRU caches the resident copy).
+
+    Multi-device residency: ``to_device(mesh=...)`` with a 1-D block mesh
+    shards every array's leading block dim across the mesh — each device
+    holds only its block shard, the analogue of the paper's per-NAND-channel
+    partitions. The leading dim is zero-padded up to a multiple of the shard
+    count (``device_put`` requires even shards); the pad rows sit past
+    ``n_blocks`` and are never gathered.
     """
 
     arrays: dict[str, Any]  # name -> (n_blocks, cap_words) uint32 (+dir/cons)
@@ -326,16 +340,38 @@ class DeviceBlocks:
     fixed_len: int
     n_blocks: int
     on_device: bool = False
+    mesh: Optional[Mesh] = None  # block-axis mesh when shard-resident
 
     def block(self, bi: int) -> dict[str, Any]:
         return {k: v[bi] for k, v in self.arrays.items()}
 
-    def to_device(self, device=None) -> "DeviceBlocks":
-        """Device-resident copy of this DeviceBlocks (no-op when resident)."""
+    def to_device(self, device=None, *, mesh: Optional[Mesh] = None) -> "DeviceBlocks":
+        """Device-resident copy of this DeviceBlocks (no-op when resident).
+
+        With ``mesh`` (a 1-D block mesh), each array is placed with a
+        block-axis :class:`NamedSharding` so every device holds only its
+        shard of the blocks; without it, a plain single-device put."""
         if self.on_device:
             return self
-        arrays = jax.device_put(dict(self.arrays), device)
-        return dataclasses.replace(self, arrays=arrays, on_device=True)
+        arrays = dict(self.arrays)
+        if mesh is not None:
+            s = block_shard_count(mesh)
+            pad = (-self.n_blocks) % s
+            if pad:
+                arrays = {
+                    k: np.concatenate(
+                        [v, np.zeros((pad,) + v.shape[1:], dtype=v.dtype)]
+                    )
+                    for k, v in arrays.items()
+                }
+            arrays = {
+                k: jax.device_put(v, NamedSharding(mesh, PartitionSpec(
+                    block_axis_name(mesh), *([None] * (v.ndim - 1)))))
+                for k, v in arrays.items()
+            }
+        else:
+            arrays = jax.device_put(arrays, device)
+        return dataclasses.replace(self, arrays=arrays, on_device=True, mesh=mesh)
 
 
 def _cap_words(sf: SageFile, s: str) -> int:
@@ -426,14 +462,22 @@ def bucket_size(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
-def pad_block_ids(ids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+def pad_block_ids(ids: np.ndarray, shards: int = 1) -> tuple[np.ndarray, np.ndarray]:
     """Pad ``ids`` to its bucket: returns (padded ids, int32 validity mask).
 
     Pad lanes repeat ``ids[0]`` (any in-bounds block works — the mask makes
-    their decode output deterministic PAD/zeros)."""
+    their decode output deterministic PAD/zeros).
+
+    With ``shards > 1`` the bucket is computed *per shard* and the total pads
+    to ``bucket(ceil(n / shards)) * shards``, so every device's shard keeps a
+    power-of-two lane count (the zero-retrace guarantee holds per
+    (per-shard bucket, shard count)) and ``shard_map`` sees an evenly
+    divisible leading dim. ``shards=1`` reduces to the single-device rule."""
     ids = np.asarray(ids, dtype=np.int64)
     n = ids.size
-    b = bucket_size(n)
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    b = bucket_size(-(-n // shards)) * shards
     padded = np.full(b, ids[0], dtype=np.int64)
     padded[:n] = ids
     valid = (np.arange(b) < n).astype(np.int32)
@@ -455,6 +499,17 @@ def gather_block_arrays(db: DeviceBlocks, ids: np.ndarray, valid: np.ndarray) ->
     return _gather_blocks_jit(db.arrays, jnp.asarray(ids, jnp.int32), jnp.asarray(valid, jnp.int32))
 
 
+def _fill_counts(out: dict[str, jax.Array], sub: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """Fill per-block counts missing from a decode dict (the Pallas kernel
+    emits token/read planes only) from the gathered ``dir`` rows, masked by
+    the validity column — no host-side directory indexing on the hot path."""
+    if "n_reads" not in out:
+        v = sub["valid"][:, 0]
+        out["n_reads"] = sub["dir"][:, D["n_reads"]] * v
+        out["n_tokens"] = sub["dir"][:, D["n_tokens"]] * v
+    return out
+
+
 def decode_blocks_padded(
     db: DeviceBlocks,
     ids: np.ndarray,
@@ -465,16 +520,94 @@ def decode_blocks_padded(
     """Decode an already-padded block-id set; returns padded-length outputs.
 
     ``decoder`` maps gathered block arrays -> decode dict (defaults to the
-    jitted vmap path). Missing per-block counts (the Pallas kernel emits
-    token/read planes only) are filled from the resident ``dir`` array — no
-    host-side directory indexing on the hot path."""
+    jitted vmap path)."""
     sub = gather_block_arrays(db, ids, valid)
     out = dict(_decode_arrays_vmap(sub, db) if decoder is None else decoder(sub))
-    if "n_reads" not in out:
-        v = sub["valid"][:, 0]
-        out["n_reads"] = sub["dir"][:, D["n_reads"]] * v
-        out["n_tokens"] = sub["dir"][:, D["n_tokens"]] * v
-    return out
+    return _fill_counts(out, sub)
+
+
+# --------------------------------------------------------------------------
+# shard_map decode: each device decodes only its resident block shard
+# --------------------------------------------------------------------------
+# The block axis is the paper's unit of parallelism (per-NAND-channel decode
+# units, §5.2/§5.3); here it is a 1-D device mesh. One jitted entry point per
+# (mesh, per-shard bucket) gathers the padded block-id set out of the
+# shard-resident arrays (GSPMD inserts the collective permutes), constrains
+# the gathered lanes to the block axis, and runs the per-block decoder under
+# ``shard_map`` so each device decodes exactly its ``bucket`` lanes. The
+# valid-lane mask contract is unchanged: every shard gets a power-of-two lane
+# count with its own mask tail, so outputs are bit-identical to the
+# single-device reference and the jit cache stays one entry per
+# (per-shard bucket, shard count).
+
+#: decoder_key registry for the sharded path — the per-shard local decode
+#: must be rebuilt inside the cached jit (a per-read callable can't key a
+#: cache), so sessions pass a hashable key instead of a closure.
+_SHARD_DECODERS: dict[str, Callable] = {}
+
+
+def register_shard_decoder(kind: str, build: Callable) -> None:
+    """Register a sharded decode-path builder. ``build(caps, classes,
+    fixed_len, opts)`` returns a callable mapping the shard-local gathered
+    block arrays -> complete decode dict (counts included)."""
+    _SHARD_DECODERS[kind] = build
+
+
+def _build_vmap_shard_decoder(caps, classes, fixed_len, opts):
+    def local(sub):
+        return dict(jax.vmap(
+            lambda blk: decode_block_arrays(blk, caps=caps, classes=classes, fixed_len=fixed_len)
+        )(sub))
+    return local
+
+
+register_shard_decoder("vmap", _build_vmap_shard_decoder)
+
+
+@functools.lru_cache(maxsize=32)
+def _build_sharded_decode(mesh: Mesh, caps_h, classes_key, fixed_len, decoder_key):
+    """One jitted gather+shard_map decode per (mesh, decode signature)."""
+    axis = block_axis_name(mesh)
+    classes = {k: tuple(v) for k, v in classes_key}
+    kind, opts = decoder_key if decoder_key is not None else ("vmap", ())
+    local_decode = _SHARD_DECODERS[kind](caps_h, classes, fixed_len, dict(opts))
+
+    def local(sub):
+        return _fill_counts(local_decode(sub), sub)
+
+    @jax.jit
+    def run(arrays, ids, valid):
+        TRACE_COUNTS["decode_shard"] += 1
+        sub = {k: v[ids] for k, v in arrays.items()}
+        sub["valid"] = valid[:, None].astype(jnp.int32)
+        sub = jax.lax.with_sharding_constraint(sub, block_specs(sub, mesh))
+        # check_vma=False: pallas_call has no replication rule; every in/out
+        # is fully block-sharded so replication checking is vacuous here
+        return shard_map(
+            local, mesh=mesh, in_specs=PartitionSpec(axis),
+            out_specs=PartitionSpec(axis), check_vma=False,
+        )(sub)
+
+    return run
+
+
+def decode_blocks_sharded(
+    db: DeviceBlocks,
+    ids: np.ndarray,
+    valid: np.ndarray,
+    *,
+    mesh: Mesh,
+    decoder_key=None,
+) -> dict[str, jax.Array]:
+    """Decode an already-padded block-id set under ``shard_map`` on ``mesh``.
+
+    ``ids`` must be padded to a multiple of the mesh's shard count (see
+    :func:`pad_block_ids`); outputs come back block-major at the padded
+    length, leading dim sharded over the block axis."""
+    classes_key = tuple(sorted((k, tuple(v)) for k, v in db.classes.items()))
+    run = _build_sharded_decode(mesh, _HashableCaps(db.caps), classes_key,
+                                db.fixed_len, decoder_key)
+    return dict(run(db.arrays, jnp.asarray(ids, jnp.int32), jnp.asarray(valid, jnp.int32)))
 
 
 def decode_blocks_bucketed(
@@ -483,6 +616,8 @@ def decode_blocks_bucketed(
     *,
     decoder: Optional[Callable[[dict[str, jax.Array]], dict[str, jax.Array]]] = None,
     postprocess: Optional[Callable[[dict[str, jax.Array]], dict[str, jax.Array]]] = None,
+    mesh: Optional[Mesh] = None,
+    decoder_key=None,
 ) -> dict[str, jax.Array]:
     """Bucketed ranged decode: pad ``ids`` to its power-of-two bucket, decode
     on device, and slice the outputs back to ``len(ids)``. Bit-identical to
@@ -491,7 +626,21 @@ def decode_blocks_bucketed(
 
     ``postprocess`` (e.g. output formatting) runs on the decode dict at the
     *padded* bucket shape, so anything it jits buckets identically instead
-    of specializing on the requested range length."""
+    of specializing on the requested range length.
+
+    With ``mesh`` the decode runs under ``shard_map`` over the block axis
+    (each device decodes its lane shard; padding rounds to bucket x shards)
+    and ``decoder_key`` — not ``decoder``, whose identity can't key a jit
+    cache — selects the decode path (None = vmap; see
+    :func:`register_shard_decoder`)."""
+    if mesh is not None and decoder is not None:
+        raise ValueError(
+            "mesh= takes decoder_key=, not decoder= (a closure can't key the "
+            "sharded jit cache); register the path via register_shard_decoder"
+        )
+    if mesh is None and decoder_key is not None:
+        raise ValueError("decoder_key= only selects the sharded path; pass mesh= "
+                         "(or use decoder= for the single-device path)")
     ids = np.asarray(ids, dtype=np.int64)
     if ids.size == 0:  # zero-block datasets/ranges: nothing to pad or decode
         R, C = db.caps.segs, db.caps.tokens
@@ -501,8 +650,12 @@ def decode_blocks_bucketed(
         for k in ("read_pos", "read_rev", "read_start", "read_len", "read_corner"):
             out[k] = jnp.zeros((0, R), jnp.int32)
         return postprocess(out) if postprocess is not None else out
-    padded, valid = pad_block_ids(ids)
-    out = decode_blocks_padded(db, padded, valid, decoder=decoder)
+    shards = block_shard_count(mesh)
+    padded, valid = pad_block_ids(ids, shards)
+    if mesh is None:
+        out = decode_blocks_padded(db, padded, valid, decoder=decoder)
+    else:
+        out = decode_blocks_sharded(db, padded, valid, mesh=mesh, decoder_key=decoder_key)
     if postprocess is not None:
         out = postprocess(out)
     if padded.size == ids.size:
@@ -511,9 +664,12 @@ def decode_blocks_bucketed(
 
 
 class _HashableCaps:
-    """Hashable static wrapper around BlockCaps for jit."""
+    """Hashable static wrapper around BlockCaps for jit (idempotent: wrapping
+    an already-wrapped caps reuses the underlying dataclass)."""
 
     def __init__(self, caps) -> None:
+        if isinstance(caps, _HashableCaps):
+            caps = caps._c
         self._c = caps
         self._key = tuple(sorted(dataclasses.asdict(caps).items()))
 

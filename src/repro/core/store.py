@@ -17,6 +17,11 @@ and keeps an LRU of prepared :class:`DeviceBlocks` so hot datasets stay
 device-resident while cold ones are re-prepared on demand. Sessions choose
 the decode path (vmapped JAX or the Pallas kernel) once; every command on
 the session uses it.
+
+Multi-device: ``SageStore(shards=N)`` (or ``mesh=``) shards residency over
+the block axis — each device holds and decodes only its block partition
+(the paper's per-NAND-channel parallelism, DESIGN.md §6) — and sessions
+decode under ``shard_map`` with results left device-sharded.
 """
 
 from __future__ import annotations
@@ -25,12 +30,13 @@ import dataclasses
 import functools
 import queue
 import threading
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from pathlib import Path
 from typing import Callable, Iterator, Optional, Sequence, Union
 
 import jax
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.api import apply_format, get_format
 from repro.core.bitio import unpack_2bit_batch
@@ -41,8 +47,18 @@ from repro.core.decode_jax import (
 )
 from repro.core.encoder import SageEncoder
 from repro.core.format import D, SageFile
+from repro.distributed.sharding import make_block_mesh
 
 BlockRange = Union[None, int, tuple, Sequence[int]]
+
+
+def _resolve_mesh(mesh: Optional[Mesh], shards: Optional[int]) -> Optional[Mesh]:
+    """Normalize the mesh=/shards= knob pair (shards builds a block mesh)."""
+    if mesh is not None and shards is not None:
+        raise ValueError("pass mesh= or shards=, not both")
+    if shards is not None:
+        return None if shards == 1 else make_block_mesh(shards)
+    return mesh
 
 
 def slice_device_blocks(db: DeviceBlocks, ids: np.ndarray) -> DeviceBlocks:
@@ -64,7 +80,11 @@ def slice_device_blocks(db: DeviceBlocks, ids: np.ndarray) -> DeviceBlocks:
 
 @dataclasses.dataclass
 class StreamBatch:
-    """One SAGe_ISP delivery: a decoded (and formatted) group of blocks."""
+    """One SAGe_ISP delivery: a decoded (and formatted) group of blocks.
+
+    ``data`` holds device arrays (block-sharded when the session has a
+    mesh) — nothing is materialized on host; consumers that want numpy call
+    ``np.asarray`` themselves, and device-side consumers chain directly."""
 
     name: str
     epoch: int
@@ -75,12 +95,26 @@ class StreamBatch:
 
 
 class SageStore:
-    """Registry of SAGe datasets with LRU-cached device preparation."""
+    """Registry of SAGe datasets with LRU-cached device preparation.
 
-    def __init__(self, max_prepared: int = 4) -> None:
+    ``mesh`` (or the ``shards=N`` shorthand, which builds a 1-D block mesh
+    over the first N devices) makes residency multi-device: every prepared
+    dataset's block axis is sharded across the mesh — each device holds and
+    decodes only its block partition, the paper's per-NAND-channel layout
+    mapped onto the device mesh. Default (no mesh) is the single-device
+    behavior, unchanged."""
+
+    def __init__(
+        self,
+        max_prepared: int = 4,
+        *,
+        mesh: Optional[Mesh] = None,
+        shards: Optional[int] = None,
+    ) -> None:
         if max_prepared < 1:
             raise ValueError("max_prepared must be >= 1")
         self.max_prepared = max_prepared
+        self.mesh = _resolve_mesh(mesh, shards)
         self.last_write_stats: dict = {}
         self._sources: dict[str, Union[SageFile, str]] = {}
         self._files: dict[str, SageFile] = {}
@@ -154,12 +188,13 @@ class SageStore:
 
         Preparation (host gather) and upload (``jax.device_put``) happen
         once per LRU residency; every subsequent read gathers and decodes
-        entirely on device."""
+        entirely on device. With a store mesh the upload shards the block
+        axis, so each device's residency is only its block partition."""
         with self._lock:
             if name in self._prepared:
                 self._prepared.move_to_end(name)
                 return self._prepared[name]
-            db = prepare_device_blocks(self.file(name)).to_device()
+            db = prepare_device_blocks(self.file(name)).to_device(mesh=self.mesh)
             self._prepared[name] = db
             while len(self._prepared) > self.max_prepared:
                 self._prepared.popitem(last=False)
@@ -190,18 +225,53 @@ class SageStore:
         starts = np.asarray(db.arrays["dir"][ids, D["cons_start"]]).astype(np.int64)
         return wins, starts
 
-    def session(self, *, use_pallas: bool = False, interpret: bool = True) -> "SageReadSession":
-        return SageReadSession(self, use_pallas=use_pallas, interpret=interpret)
+    def session(
+        self,
+        *,
+        use_pallas: bool = False,
+        interpret: bool = True,
+        mesh: Optional[Mesh] = None,
+        shards: Optional[int] = None,
+    ) -> "SageReadSession":
+        """Open a read session. ``mesh``/``shards`` default to the store's
+        mesh (``shards=1`` forces the single-device decode path).
+
+        On a sharded store the only valid overrides are the store's own mesh
+        or the single-device path: resident arrays are committed to the
+        store mesh's devices, so decoding under a *different* mesh would die
+        deep inside jit with an opaque device-mismatch error — reject it
+        here instead."""
+        m = _resolve_mesh(mesh, shards)
+        if mesh is None and shards is None:
+            m = self.mesh
+        if m is not None and self.mesh is not None and m != self.mesh:
+            raise ValueError(
+                "session mesh must match the store's residency mesh "
+                f"({m.devices.shape[0]} vs {self.mesh.devices.shape[0]} shards); "
+                "re-shard by building a store with the desired mesh, or pass "
+                "shards=1 for the single-device decode path"
+            )
+        return SageReadSession(self, use_pallas=use_pallas, interpret=interpret, mesh=m)
 
 
 class SageReadSession:
     """One consumer's view of a store: the paper's command set with a fixed
-    decode path (vmap or Pallas) chosen per session."""
+    decode path (vmap or Pallas) and shard layout (``mesh``) chosen per
+    session. With a mesh, every SAGe_Read/SAGe_ISP decode runs under
+    ``shard_map`` over the block axis and results stay device-sharded."""
 
-    def __init__(self, store: SageStore, *, use_pallas: bool = False, interpret: bool = True) -> None:
+    def __init__(
+        self,
+        store: SageStore,
+        *,
+        use_pallas: bool = False,
+        interpret: bool = True,
+        mesh: Optional[Mesh] = None,
+    ) -> None:
         self.store = store
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.mesh = mesh
 
     # ------------------------------------------------------------ SAGe_Write
     def write(self, name: str, read_set, consensus, **kwargs) -> SageFile:
@@ -240,6 +310,15 @@ class SageReadSession:
             fixed_len=db.fixed_len, interpret=self.interpret,
         )
 
+    def _decoder_key(self):
+        """Hashable decode-path key for the shard_map hot path (importing
+        the kernel module registers its shard decoder)."""
+        if not self.use_pallas:
+            return None
+        import repro.kernels.sage_decode  # noqa: F401  (registers "pallas")
+
+        return ("pallas", (("interpret", self.interpret),))
+
     def read(
         self,
         name: str,
@@ -258,15 +337,25 @@ class SageReadSession:
         decoded/formatted at the bucket shape (so the jitted decoder and
         format kernels compile once per bucket, not once per range length);
         the padding lanes are masked through decode and sliced off at the
-        end (``decode_blocks_bucketed`` owns the pad/slice invariant)."""
+        end (``decode_blocks_bucketed`` owns the pad/slice invariant).
+
+        With a session mesh the same contract holds per shard: ids pad to
+        bucket x shards, each device decodes its lane shard under
+        ``shard_map``, and the returned arrays are block-sharded."""
         ids = self.resolve_blocks(name, block_range)
         db = self.store.prepared(name)
+        path = (
+            dict(mesh=self.mesh, decoder_key=self._decoder_key())
+            if self.mesh is not None
+            else dict(decoder=self._decoder(db))
+        )
         out = decode_blocks_bucketed(
-            db, ids, decoder=self._decoder(db),
+            db, ids,
             postprocess=lambda dec: apply_format(
                 dec, fmt, kmer_k=kmer_k, use_pallas=self.use_pallas,
                 interpret=self.interpret, context=f"SAGe_Read({name!r})",
             ),
+            **path,
         )
         out["block_ids"] = ids
         return out
@@ -284,6 +373,7 @@ class SageReadSession:
         prefetch: int = 2,
         wrap: bool = False,
         max_fetches: Optional[int] = None,
+        dispatch: Optional[int] = None,
     ):
         """SAGe_ISP: stream decoded block groups into an analysis consumer.
 
@@ -291,6 +381,15 @@ class SageReadSession:
         list of consumer results (decode of group #i+1 overlaps the consumer
         on group #i via ``prefetch`` background buffers). With ``consumer=None``
         returns the :class:`StreamBatch` iterator for pull-based consumers.
+
+        ``dispatch=N`` selects thread-free async pipelining instead of the
+        ``prefetch`` worker: up to N decode groups are dispatched ahead
+        through JAX's async runtime before the first is yielded, so device
+        decode of group #i+k overlaps consumption of group #i with zero
+        host synchronization — batches hold device(-sharded) arrays that
+        only materialize if the consumer asks. Use it for device-side
+        consumers (the token pipeline); keep ``prefetch`` threads for
+        consumers that block on host work.
 
         ``wrap=True`` cycles block groups forever (epoch increments at each
         wraparound) — bound it with ``max_fetches`` or pull-based iteration.
@@ -300,11 +399,13 @@ class SageReadSession:
             raise ValueError(f"start_block {start_block} out of bounds (0..{nb - 1})")
         if blocks_per_fetch < 1:
             raise ValueError(f"blocks_per_fetch must be >= 1, got {blocks_per_fetch}")
+        if dispatch is not None and dispatch < 0:
+            raise ValueError(f"dispatch depth must be >= 0, got {dispatch}")
         get_format(fmt)
         it = self._stream_iter(
             name, fmt=fmt, kmer_k=kmer_k, start_block=start_block,
             blocks_per_fetch=blocks_per_fetch, prefetch=prefetch,
-            wrap=wrap, max_fetches=max_fetches,
+            wrap=wrap, max_fetches=max_fetches, dispatch=dispatch,
         )
         if consumer is None:
             return it
@@ -339,7 +440,7 @@ class SageReadSession:
 
     def _stream_iter(
         self, name: str, *, fmt, kmer_k, start_block, blocks_per_fetch,
-        prefetch, wrap, max_fetches,
+        prefetch, wrap, max_fetches, dispatch=None,
     ) -> Iterator[StreamBatch]:
         nb = self.store.n_blocks(name)
         groups = self._group_ids(nb, start_block, blocks_per_fetch, wrap, max_fetches)
@@ -348,6 +449,20 @@ class SageReadSession:
             data = self.read(name, ids, fmt, kmer_k=kmer_k)
             return StreamBatch(name=name, epoch=epoch, block_ids=ids, data=data,
                                next_block=nxt_b, next_epoch=nxt_epoch)
+
+        if dispatch is not None:
+            # thread-free async pipelining: produce() only *dispatches* the
+            # decode (device arrays come back as futures), so running up to
+            # `dispatch` groups ahead overlaps device decode with the
+            # consumer without a worker thread or any host sync
+            pending: "deque[StreamBatch]" = deque()
+            for g in groups:
+                pending.append(produce(*g))
+                if len(pending) > dispatch:
+                    yield pending.popleft()
+            while pending:
+                yield pending.popleft()
+            return
 
         if prefetch <= 0:  # synchronous: decode on demand, fully deterministic
             for g in groups:

@@ -6,12 +6,21 @@ batches, with DOUBLE-BUFFERED prefetch so data preparation overlaps the
 train step exactly like the paper overlaps decompression with mapping
 (batch#i prepares while batch#i-1 trains).
 
+The fetch path is host-sync-free: SAGe_ISP runs in async-dispatch mode
+(device decode of fetch #i+k overlaps fetch #i), the per-block PAD trim is
+a fixed-shape device gather (the k-mer format guarantees exactly
+``n_tokens // k`` real leading groups per block — pad ids only in the
+tail), and fetched chunks accumulate in a device-side carry buffer. The
+only host transfer is one ``np.asarray`` per *batch* at the (tokens,
+labels) boundary — ``transfer_stats`` counts fetches vs host transfers so
+benchmarks can assert the contract.
+
 Determinism & fault tolerance: the cursor is (epoch, block index, consumed
 tokens) — restarting from a checkpoint replays the exact stream (the block
 directory is the unit of restart, mirroring its role as the unit of
 storage/NAND-channel layout in the paper). The k-mer token stream is blocks
 in cyclic order with PAD groups dropped, so it is invariant to
-``blocks_per_fetch`` and to which decode path the session uses.
+``blocks_per_fetch``, to the decode path, and to the session's shard count.
 """
 
 from __future__ import annotations
@@ -21,6 +30,8 @@ import queue
 import threading
 from typing import Iterator, Optional, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import kmer_special_ids, pick_k
@@ -60,16 +71,24 @@ class SageTokenPipeline:
         use_pallas_decode: bool = False,
         blocks_per_fetch: int = 4,
         prefetch: int = 2,
+        dispatch: int = 2,
         cursor: Optional[Cursor] = None,
         seed: int = 0,
+        mesh=None,
+        shards: Optional[int] = None,
     ) -> None:
+        if store is not None and (mesh is not None or shards is not None):
+            raise ValueError(
+                "pass mesh/shards on the shared SageStore, not the pipeline — "
+                "residency sharding is store-level state"
+            )
         if isinstance(source, SageFile):
             if store is not None and name in store.names() and store.file(name) is not source:
                 raise ValueError(
                     f"dataset {name!r} already registered in the store with a different "
                     f"source; pass a unique name= to avoid clobbering it"
                 )
-            self.store = store or SageStore()
+            self.store = store or SageStore(mesh=mesh, shards=shards)
             self.name = name
             self.store.register(self.name, source)
         else:
@@ -85,17 +104,43 @@ class SageTokenPipeline:
         self.seq_len = seq_len
         self.blocks_per_fetch = blocks_per_fetch
         self.prefetch = prefetch
+        self.dispatch = dispatch
         self.cursor = cursor or Cursor()
-        self._buf = np.zeros((0,), np.int32)
+        self._parts: list[jax.Array] = []  # device-side k-mer carry buffer
+        self._buffered = 0  # tokens buffered across self._parts (host-known)
         self._skip = 0  # tokens to drop after a cursor restore
         self._stream = None  # lazy SAGe_ISP iterator, recreated on restore
         self._stream_epoch0 = self.cursor.epoch  # epoch base of the open stream
-        # deterministic k-mer count per block (tail group hits PAD, dropped)
+        self._gidx: dict[tuple, tuple] = {}  # block-id group -> PAD-trim gather index
+        self._prefetch_thread: Optional[threading.Thread] = None
+        self.transfer_stats = {"fetches": 0, "host_transfers": 0}
+        # deterministic k-mer count per block: the k-mer format maps every
+        # group at/past n_tokens to the pad id and nothing before it, so
+        # exactly n_tokens // k leading groups per block are real
         self._kpb = (np.asarray(sf.directory[:, D["n_tokens"]]) // self.k).astype(np.int64)
 
     # ------------------------------------------------------------------
-    def _fetch_tokens(self) -> np.ndarray:
-        """Pull the next block group off the SAGe_ISP stream as flat k-mers."""
+    def _gather_index(self, ids: tuple) -> tuple:
+        """(row, col) device indices selecting each block row's real k-mer
+        prefix (the fixed-shape PAD trim) — cached per block-id group, so
+        steady-state fetches reuse one uploaded index pair."""
+        cached = self._gidx.get(ids)
+        if cached is None:
+            counts = self._kpb[list(ids)]
+            total = int(counts.sum())
+            row = np.repeat(np.arange(len(ids), dtype=np.int64), counts)
+            off = np.cumsum(counts) - counts
+            col = np.arange(total, dtype=np.int64) - np.repeat(off, counts)
+            cached = (jnp.asarray(row, jnp.int32), jnp.asarray(col, jnp.int32))
+            self._gidx[ids] = cached
+        return cached
+
+    def _fetch_tokens(self) -> jax.Array:
+        """Pull the next block group off the SAGe_ISP stream as flat k-mers.
+
+        Device-resident end to end: the stream delivers (possibly sharded)
+        device arrays with `dispatch` groups in flight, and the PAD trim is
+        one fixed-shape gather — no blocking np.asarray per fetch."""
         if self._stream is None:
             self._stream_epoch0 = self.cursor.epoch
             self._stream = self.session.read_stream(
@@ -105,26 +150,32 @@ class SageTokenPipeline:
                 start_block=self.cursor.block,
                 blocks_per_fetch=self.blocks_per_fetch,
                 prefetch=0,  # batch-level prefetch lives in prefetched()
+                dispatch=self.dispatch,
                 wrap=True,
             )
         sb = next(self._stream)
         # the stream is the single source of truth for cyclic-advance state
         self.cursor.block = sb.next_block
         self.cursor.epoch = self._stream_epoch0 + sb.next_epoch
-        km = np.asarray(sb.data["kmer"])  # (blocks_per_fetch, C//k)
-        flat = km.reshape(-1)
-        out = flat[flat != self.sp["pad"]].astype(np.int32)
+        self.transfer_stats["fetches"] += 1
+        row, col = self._gather_index(tuple(int(b) for b in np.asarray(sb.block_ids)))
+        out = sb.data["kmer"][row, col]  # (sum kpb[ids],) int32, on device
         if self._skip:
-            take = min(self._skip, out.size)
+            take = min(self._skip, int(out.shape[0]))
             out = out[take:]
             self._skip -= take
         return out
 
     def _batches_from_buffer(self) -> Iterator[dict[str, np.ndarray]]:
         need = self.batch * (self.seq_len + 1)
-        while self._buf.size >= need:
-            chunk = self._buf[:need].reshape(self.batch, self.seq_len + 1)
-            self._buf = self._buf[need:]
+        while self._buffered >= need:
+            buf = self._parts[0] if len(self._parts) == 1 else jnp.concatenate(self._parts)
+            head, rest = buf[:need], buf[need:]
+            self._parts = [rest]
+            self._buffered = int(rest.shape[0])
+            # the single host transfer: one materialized (tokens, labels) batch
+            chunk = np.asarray(head).reshape(self.batch, self.seq_len + 1)
+            self.transfer_stats["host_transfers"] += 1
             self.cursor.consumed += need
             yield {
                 "tokens": chunk[:, :-1].copy(),
@@ -133,26 +184,43 @@ class SageTokenPipeline:
 
     def batches(self) -> Iterator[dict[str, np.ndarray]]:
         """Infinite deterministic batch stream (single-threaded)."""
+        need = self.batch * (self.seq_len + 1)
         while True:
-            while self._buf.size < self.batch * (self.seq_len + 1):
-                self._buf = np.concatenate([self._buf, self._fetch_tokens()])
+            while self._buffered < need:
+                c = self._fetch_tokens()
+                self._parts.append(c)
+                self._buffered += int(c.shape[0])
             yield from self._batches_from_buffer()
 
     def prefetched(self) -> Iterator[dict[str, np.ndarray]]:
-        """Double-buffered: decode of fetch#i overlaps training on #i-1."""
+        """Double-buffered: decode of fetch#i overlaps training on #i-1.
+
+        The worker uses the timeout-put-with-stop-check loop (like
+        ``store._stream_iter``) so abandoning the iterator mid-stream — even
+        with a full queue — terminates the thread instead of leaking it
+        blocked on ``q.put``."""
         q: queue.Queue = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
+
+        def put_or_stop(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def worker():
             try:
                 for b in self.batches():
-                    if stop.is_set():
+                    if not put_or_stop(b):
                         return
-                    q.put(b)
             except Exception as e:  # pragma: no cover
-                q.put(e)
+                put_or_stop(e)
 
         t = threading.Thread(target=worker, daemon=True)
+        self._prefetch_thread = t  # exposed so tests can assert termination
         t.start()
         try:
             while True:
@@ -177,6 +245,7 @@ class SageTokenPipeline:
         block = int(np.searchsorted(cum, rem, side="right"))
         within = rem - (int(cum[block - 1]) if block else 0)
         self.cursor = Cursor(epoch=epoch, block=block, consumed=consumed)
-        self._buf = np.zeros((0,), np.int32)
+        self._parts = []
+        self._buffered = 0
         self._skip = within
         self._stream = None  # re-open the ISP stream at the restored block

@@ -1,1 +1,14 @@
-from repro.distributed.sharding import Rules, current_rules, install_rules, param_shardings, shard_act, use_rules
+from repro.distributed.sharding import (
+    BLOCK_AXIS,
+    Rules,
+    block_shard_count,
+    block_sharding,
+    block_specs,
+    current_rules,
+    install_rules,
+    make_block_mesh,
+    param_shardings,
+    shard_act,
+    shard_map,
+    use_rules,
+)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def pipeline_apply(
     mesh: Mesh,
@@ -80,7 +82,7 @@ def pipeline_apply(
         jax.tree.map(lambda _: P(axis), stacked_params),
         P(),
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         pipelined, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
     )
     return fn(stacked_params, x)

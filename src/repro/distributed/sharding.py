@@ -1,4 +1,4 @@
-"""Logical-axis sharding rules (DP/TP/EP/SP) for the production meshes.
+"""Logical-axis sharding rules (DP/TP/EP/SP + SAGe blocks) for the meshes.
 
 Model code annotates activations with *logical* names via :func:`shard_act`;
 a context-installed :class:`Rules` maps them to mesh PartitionSpecs. With no
@@ -7,6 +7,14 @@ rules installed (unit tests, single device), annotations are no-ops.
 Parameter shardings are derived from the param-tree *path* by pattern
 (:func:`param_spec`), so every architecture gets Megatron-style TP + EP
 without per-model boilerplate.
+
+The SAGe store shards over *blocks* — the paper's independent unit of
+storage, decode, and checkpointing (its per-NAND-channel partitions, §5.3):
+:func:`make_block_mesh` builds the 1-D store-level mesh and
+:func:`block_sharding` / :func:`block_specs` place the leading block axis of
+every prepared stream array on it. ``Rules`` carries the same axis name
+(``block_axis``) so model-side code can annotate SAGe-derived activations
+with the ``sage_blocks`` logical name.
 """
 
 from __future__ import annotations
@@ -18,9 +26,77 @@ import threading
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 top-level API
+    _shard_map = jax.shard_map
+    _SHARD_MAP_HAS_VMA = True
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_HAS_VMA = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """Version-tolerant shard_map: ``jax.shard_map`` on new jax, the
+    experimental one on 0.4.x — where the varying-manual-axes check is
+    still called ``check_rep``. All repro code routes through this."""
+    if not _SHARD_MAP_HAS_VMA:
+        kw["check_rep"] = check_vma
+    else:
+        kw["check_vma"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 _state = threading.local()
+
+BLOCK_AXIS = "blocks"  # the store-level mesh axis (SAGe block partitions)
+
+
+def make_block_mesh(shards: Optional[int] = None, *, axis: str = BLOCK_AXIS) -> Mesh:
+    """1-D store-level mesh over the first ``shards`` local devices.
+
+    ``shards=None`` uses every visible device. On a CPU-only container the
+    device pool can be widened with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    initializes) — the recipe the shard benchmark and CI smoke use."""
+    devs = jax.devices()
+    n = len(devs) if shards is None else int(shards)
+    if not (1 <= n <= len(devs)):
+        raise ValueError(
+            f"cannot build a {n}-shard block mesh with {len(devs)} visible "
+            f"device(s); on CPU, widen the pool with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={max(n, 2)}"
+        )
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def block_axis_name(mesh: Mesh) -> str:
+    """The block axis of a store-level mesh (its single/leading axis)."""
+    return mesh.axis_names[0]
+
+
+def block_shard_count(mesh: Optional[Mesh]) -> int:
+    """Number of block shards a mesh implies (1 for ``None``)."""
+    if mesh is None:
+        return 1
+    return int(mesh.devices.shape[0])
+
+
+def block_spec(ndim: int, *, axis: str = BLOCK_AXIS) -> P:
+    """PartitionSpec sharding dim 0 (the block axis) of an ndim array."""
+    return P(axis, *([None] * (ndim - 1)))
+
+
+def block_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """NamedSharding placing an array's leading block dim on ``mesh``."""
+    return NamedSharding(mesh, block_spec(ndim, axis=block_axis_name(mesh)))
+
+
+def block_specs(tree, mesh: Mesh):
+    """Per-leaf block-axis NamedShardings for a pytree of block-major arrays."""
+    return jax.tree.map(lambda v: block_sharding(mesh, v.ndim), tree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +108,7 @@ class Rules:
     model_axis: str = "model"
     seq_shard: bool = False  # SP: shard activation seq dim over model axis
     pure_dp: bool = False  # fold the model axis into DP (small models)
+    block_axis: str = BLOCK_AXIS  # SAGe store: leading block dim of reads
 
     def batch(self):  # batch dim of activations / inputs
         axes = tuple(a for a in self.data_axes if a in self.mesh.axis_names)
@@ -52,6 +129,8 @@ class Rules:
             "kv_cache": P(b, None, m, None),  # (B, T, KV, Dh)
             "kv_cache_seq": P(b, m, None, None),  # long-context: shard T
             "ssm_state": P(b, m, None, None),  # (B, H, P, N)
+            # SAGe store outputs: block-major decode/format arrays (B, ...)
+            "sage_blocks": P(self.block_axis if self.block_axis in self.mesh.axis_names else None),
         }
         return table[name]
 
@@ -129,8 +208,8 @@ def param_spec(path: str, ndim: int, rules: Rules) -> P:
         (rules.model_axis if a == "model" else a) for a in ax
     ]
     ax = ax[:ndim]
-    # never request sharding a dim the mesh can't divide; GSPMD would error
-    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    # divisibility fixups (replicating any dim the mesh can't divide) are
+    # the caller's job — see param_shardings
     return P(*ax)
 
 

@@ -23,7 +23,13 @@ from repro.core.api import kmer_special_ids
 from repro.core.decode_jax import PAD_BASE, TRACE_COUNTS
 
 
-def _kmer_kernel(k: int, tok_ref, out_ref):
+def _kmer_kernel(k: int, with_ntok: bool, *refs):
+    if with_ntok:
+        tok_ref, ntok_ref, out_ref = refs
+        n_tok = ntok_ref[0, 0]
+    else:
+        tok_ref, out_ref = refs
+        n_tok = None
     t = tok_ref[0].astype(jnp.int32)  # (TILE,)
     C = t.shape[0]
     g = t[: (C // k) * k].reshape(C // k, k)
@@ -32,38 +38,51 @@ def _kmer_kernel(k: int, tok_ref, out_ref):
     for i in range(k):  # Horner — avoids captured weight constants
         ids = ids * 4 + gz[:, i]
     sp = kmer_special_ids(k)
-    has_pad = jnp.any(g == PAD_BASE, axis=-1)
-    has_n = jnp.any(g == 4, axis=-1) & ~has_pad
-    ids = jnp.where(has_pad, sp["pad"], ids)
-    ids = jnp.where(has_n, sp["nblk"], ids)
+    has4 = jnp.any(g == PAD_BASE, axis=-1)  # PAD_BASE == 4 == N code
+    if n_tok is None:  # legacy: PAD and in-read N are indistinguishable
+        ids = jnp.where(has4, sp["pad"], ids)
+    else:  # the kmer_pack contract: N-block inside n_tok, pad at/past it
+        gi = jnp.arange(C // k, dtype=jnp.int32)
+        in_read = (gi + 1) * k <= n_tok
+        ids = jnp.where(has4, jnp.where(in_read, sp["nblk"], sp["pad"]), ids)
     out_ref[0] = ids
 
 
 @functools.lru_cache(maxsize=64)
-def _build_kmer_pack(nb: int, C: int, k: int, interpret: bool):
+def _build_kmer_pack(nb: int, C: int, k: int, with_ntok: bool, interpret: bool):
+    in_specs = [pl.BlockSpec((1, C), lambda i: (i, 0))]
+    if with_ntok:
+        in_specs.append(pl.BlockSpec((1, 1), lambda i: (i, 0)))
     call = pl.pallas_call(
-        functools.partial(_kmer_kernel, k),
+        functools.partial(_kmer_kernel, k, with_ntok),
         grid=(nb,),
-        in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C // k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, C // k), jnp.int32),
         interpret=interpret,
     )
 
     @jax.jit
-    def run(tokens):
+    def run(tokens, *ntok):
         TRACE_COUNTS["format_kmer_pallas"] += 1
-        return call(tokens)
+        return call(tokens, *ntok)
 
     return run
 
 
-def kmer_pack_pallas(tokens: jax.Array, k: int, *, interpret: bool = True) -> jax.Array:
-    """tokens: (nb, C) int8 -> (nb, C//k) int32."""
+def kmer_pack_pallas(
+    tokens: jax.Array, k: int, n_tokens: jax.Array | None = None, *, interpret: bool = True
+) -> jax.Array:
+    """tokens: (nb, C) int8 (+ per-block real-token counts (nb,)) ->
+    (nb, C//k) int32. See :func:`repro.core.api.kmer_pack` for the
+    PAD-vs-N-block disambiguation ``n_tokens`` enables."""
     nb, C = tokens.shape
     if nb == 0:  # a grid of zero steps cannot be built (or run)
         return jnp.zeros((0, C // k), jnp.int32)
-    return _build_kmer_pack(nb, C, k, interpret)(tokens)
+    if n_tokens is None:
+        return _build_kmer_pack(nb, C, k, False, interpret)(tokens)
+    ntok = jnp.asarray(n_tokens, jnp.int32)[:, None]
+    return _build_kmer_pack(nb, C, k, True, interpret)(tokens, ntok)
 
 
 def _onehot_kernel(tok_ref, out_ref):

@@ -40,6 +40,7 @@ from repro.core.decode_jax import (
     DeviceBlocks,
     _HashableCaps,
     decode_block_arrays,
+    register_shard_decoder,
 )
 from repro.core.format import STREAMS
 
@@ -118,3 +119,22 @@ def sage_decode_pallas(db: DeviceBlocks, *, interpret: bool = True):
         db.arrays, caps=db.caps, classes=db.classes,
         fixed_len=db.fixed_len, interpret=interpret,
     )
+
+
+def _build_pallas_shard_decoder(caps, classes, fixed_len, opts):
+    """shard_map-local Pallas decode: each device runs one pallas_call over
+    its resident lane shard (grid = per-shard bucket size), so the kernel's
+    lru signature is keyed on the *per-shard* block count and stays constant
+    across shard counts that keep the same per-device bucket."""
+    interpret = bool(opts.get("interpret", True))
+
+    def local(sub):
+        return dict(sage_decode_arrays(
+            sub, caps=caps, classes=classes, fixed_len=fixed_len, interpret=interpret,
+        ))
+
+    return local
+
+
+# sessions select this path with decoder_key=("pallas", (("interpret", x),))
+register_shard_decoder("pallas", _build_pallas_shard_decoder)

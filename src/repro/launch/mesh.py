@@ -14,12 +14,18 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
-    """Arbitrary mesh helper (tests, examples, elastic restarts)."""
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    """Arbitrary mesh helper (tests, examples, elastic restarts).
+
+    ``axis_types`` only exists on newer jax; pass it when available so
+    explicit-sharding jax keeps treating these axes as Auto."""
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):  # jax >= 0.6 explicit-sharding API
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis

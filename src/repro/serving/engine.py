@@ -39,19 +39,28 @@ def prompts_from_store(
     (its k-mer token prefix, folded into ``vocab``) until ``n_prompts``."""
     k = kmer_k if kmer_k is not None else pick_k(vocab)
     out = session.read(name, block_range, fmt="kmer", kmer_k=k)
-    km = np.asarray(out["kmer"])
+    km = out["kmer"]  # stays on device (sharded under a session mesh)
     starts, lens = np.asarray(out["read_start"]), np.asarray(out["read_len"])
     n_reads = np.asarray(out["n_reads"])
-    prompts: list[np.ndarray] = []
-    for bi in range(km.shape[0]):
-        for r in range(int(n_reads[bi])):
-            s, l = int(starts[bi, r]) // k, int(lens[bi, r]) // k
-            if l == 0:
-                continue
-            prompts.append((km[bi, s : s + min(l, max_prompt)] % vocab).astype(np.int32))
-            if len(prompts) >= n_prompts:
-                return prompts
-    return prompts
+    # one batched gather over (read_start, read_len): enumerate real reads in
+    # (block, read) order, apply the n_prompts cutoff, and pull every prompt's
+    # k-mer span out of the device array in a single fancy-indexed gather —
+    # the only host transfer is the gathered prompt tokens themselves
+    n_r = np.minimum(n_reads, starts.shape[1])
+    keep = np.arange(starts.shape[1])[None, :] < n_r[:, None]
+    keep &= lens // k > 0  # zero-k-mer reads are skipped, not emitted
+    bi, ri = np.nonzero(keep)  # row-major == the loop's (block, read) order
+    bi, ri = bi[:n_prompts], ri[:n_prompts]
+    if bi.size == 0:
+        return []
+    starts_k = starts[bi, ri] // k
+    spans = np.minimum(lens[bi, ri] // k, max_prompt)
+    ends = np.cumsum(spans)
+    offs = ends - spans
+    row = np.repeat(bi, spans)
+    col = starts_k.repeat(spans) + np.arange(ends[-1]) - offs.repeat(spans)
+    flat = np.asarray(km[jnp.asarray(row), jnp.asarray(col)] % vocab).astype(np.int32)
+    return [flat[o:e] for o, e in zip(offs, ends)]
 
 
 @dataclasses.dataclass

@@ -19,7 +19,8 @@ def test_pipeline_parallel_matches_sequential():
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed.pipeline import pipeline_apply
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("pipe",))
 L, B, D = 8, 6, 16
 ks = jax.random.split(jax.random.PRNGKey(0), L)
 ws = jax.vmap(lambda k: jax.random.normal(k, (D, D)) * 0.3)(ks)
@@ -48,7 +49,8 @@ key = jax.random.PRNGKey(0)
 p = M.moe_init(key, cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
 y_ref, aux_ref = M.moe_apply(p, x, cfg)  # no rules -> local path
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = Rules(mesh, data_axes=("data",))
 with use_rules(rules):
     y_sm, aux_sm = jax.jit(lambda p, x: M.moe_apply(p, x, cfg))(p, x)
@@ -65,13 +67,14 @@ def test_elastic_checkpoint_restore_across_meshes():
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.checkpoint import CheckpointManager
-mesh8 = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh8 = make_mesh((8,), ("model",))
 w = jax.device_put(jnp.arange(64.0).reshape(8, 8), NamedSharding(mesh8, P("model", None)))
 d = tempfile.mkdtemp()
 cm = CheckpointManager(d)
 cm.save(1, {"w": w}, block=True)
 # restore onto a DIFFERENT mesh (2x4) with a different sharding
-mesh24 = jax.make_mesh((2, 4), ("a", "b"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh24 = make_mesh((2, 4), ("a", "b"))
 like = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
 sh = {"w": NamedSharding(mesh24, P("b", "a"))}
 restored, _, _ = cm.restore(like, shardings=sh)
@@ -91,7 +94,8 @@ from repro.configs import ARCHS
 from repro.distributed.sharding import Rules, use_rules, param_shardings
 from repro.training.steps import TrainOptions, init_train_state, make_train_step
 cfg = ARCHS["qwen2-1.5b"].reduced()
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = Rules(mesh, data_axes=("data",), seq_shard=True)
 opts = TrainOptions(chunk=32)
 with use_rules(rules):

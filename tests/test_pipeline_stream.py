@@ -1,0 +1,160 @@
+"""Host-sync-free streaming: device-side fetch, carry buffer, worker
+lifecycle, and the vectorized serving prompt feed.
+
+Covers the async-streaming acceptance contract: the pipeline transfers to
+host once per *batch* (never per fetch), ``prefetched()`` workers terminate
+when the consumer abandons the iterator, ``restore()`` handles skips that
+spill across fetch boundaries, and ``prompts_from_store`` is a batched
+gather that matches the per-read loop it replaced, order and cutoff exactly.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import SageStore
+from repro.core.encoder import SageEncoder
+from repro.data.pipeline import SageTokenPipeline
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.serving.engine import prompts_from_store
+
+
+@pytest.fixture(scope="module")
+def sagefile():
+    ref = make_reference(30_000, seed=41)  # includes N-dropout reads
+    rs = sample_read_set(ref, "illumina", depth=3, seed=42)
+    return SageEncoder(ref, token_target=3072).encode(rs)
+
+
+# ----------------------------------------------------------- transfer count
+def test_one_host_transfer_per_batch_not_per_fetch(sagefile):
+    # seq_len sized so one batch needs more k-mers than any single block
+    # holds (kpb <= token_target // k = 768) -> several fetches per batch
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=900,
+                          blocks_per_fetch=1)
+    it = p.batches()
+    for _ in range(3):
+        next(it)
+    assert p.transfer_stats["host_transfers"] == 3
+    # small fetch groups force several fetches per batch — none of them
+    # may have synced to host
+    assert p.transfer_stats["fetches"] > p.transfer_stats["host_transfers"]
+
+
+def test_fetch_tokens_stays_on_device(sagefile):
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16)
+    chunk = p._fetch_tokens()
+    assert isinstance(chunk, jax.Array)
+    # the device-side PAD trim matches the k-mer format's count contract:
+    # exactly n_tokens // k leading real groups per block
+    sess = SageStore()
+    sess.register("d", sagefile)
+    km = np.asarray(sess.session().read("d", fmt="kmer", kmer_k=p.k)["kmer"])
+    expect = np.concatenate(
+        [km[b, : p._kpb[b]] for b in range(p.blocks_per_fetch)]
+    )
+    np.testing.assert_array_equal(np.asarray(chunk), expect)
+    assert (np.asarray(chunk) != p.sp["pad"]).all()
+
+
+# ------------------------------------------------------------ worker leak
+def test_abandoned_prefetched_iterator_terminates_worker(sagefile):
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16,
+                          prefetch=1)
+    it = p.prefetched()
+    next(it)  # worker running; queue (maxsize=1) fills behind the consumer
+    t = p._prefetch_thread
+    assert t is not None and t.is_alive()
+    it.close()  # abandon: generator finally -> stop.set()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "prefetch worker leaked after iterator abandon"
+
+
+def test_prefetched_matches_sync_after_leak_fix(sagefile):
+    p1 = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=32)
+    p2 = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=32)
+    sync = [next(p1.batches()) for _ in range(3)]
+    pre = p2.prefetched()
+    try:
+        got = [next(pre) for _ in range(3)]
+    finally:
+        pre.close()
+    for a, b in zip(sync, got):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+# ------------------------------------------------------- restore/skip spill
+def _reference_stream(sf, vocab, n_tokens):
+    p = SageTokenPipeline(sf, vocab_size=vocab, batch=1, seq_len=8)
+    chunks = []
+    while sum(c.size for c in chunks) < n_tokens:
+        chunks.append(np.asarray(p._fetch_tokens()))
+    return np.concatenate(chunks)
+
+
+def test_skip_spanning_multiple_fetches_drains_correctly(sagefile):
+    """A skip larger than several fetch groups must drain across fetches
+    (the restore fast-forward loop), then yield the exact stream suffix."""
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16,
+                          blocks_per_fetch=1)
+    skip = int(p._kpb[:5].sum()) + 3  # spans >5 single-block fetches
+    p._skip = skip
+    need = 2 * 17
+    got = next(p.batches())
+    exp = _reference_stream(sagefile, 256, skip + need)[skip : skip + need]
+    np.testing.assert_array_equal(got["tokens"], exp.reshape(2, 17)[:, :-1])
+    assert p._skip == 0
+
+
+def test_restore_mid_block_with_single_block_fetches(sagefile):
+    p = SageTokenPipeline(sagefile, vocab_size=256, batch=2, seq_len=16,
+                          blocks_per_fetch=1)
+    total = int(p._kpb.sum())
+    consumed = total + int(p._kpb[:2].sum()) + max(1, int(p._kpb[2]) // 2)
+    p.restore({"cursor": {"epoch": 0, "block": 0, "consumed": consumed}})
+    assert p.cursor.epoch == 1
+    need = 2 * 17
+    rem = consumed % total
+    flat = _reference_stream(sagefile, 256, total)[:total]
+    cyc = np.concatenate([flat, flat])
+    got = next(p.batches())
+    np.testing.assert_array_equal(got["tokens"], cyc[rem : rem + need].reshape(2, 17)[:, :-1])
+
+
+# ------------------------------------------------------- serving prompt feed
+def _prompts_loop_reference(session, name, *, vocab, n_prompts, max_prompt, k, block_range):
+    """The per-block x per-read Python loop prompts_from_store replaced."""
+    out = session.read(name, block_range, fmt="kmer", kmer_k=k)
+    km = np.asarray(out["kmer"])
+    starts, lens = np.asarray(out["read_start"]), np.asarray(out["read_len"])
+    n_reads = np.asarray(out["n_reads"])
+    prompts = []
+    for bi in range(km.shape[0]):
+        for r in range(int(n_reads[bi])):
+            s, l = int(starts[bi, r]) // k, int(lens[bi, r]) // k
+            if l == 0:
+                continue
+            prompts.append((km[bi, s : s + min(l, max_prompt)] % vocab).astype(np.int32))
+            if len(prompts) >= n_prompts:
+                return prompts
+    return prompts
+
+
+@pytest.mark.parametrize("n_prompts,max_prompt,block_range", [
+    (6, 32, (0, 2)),
+    (10_000, 8, None),  # cutoff beyond the dataset: every read, short prompts
+    (1, 64, (2, 5)),
+])
+def test_prompts_from_store_matches_loop(sagefile, n_prompts, max_prompt, block_range):
+    store = SageStore()
+    store.register("ds", sagefile)
+    sess = store.session()
+    got = prompts_from_store(sess, "ds", vocab=259, n_prompts=n_prompts,
+                             max_prompt=max_prompt, block_range=block_range)
+    exp = _prompts_loop_reference(sess, "ds", vocab=259, n_prompts=n_prompts,
+                                  max_prompt=max_prompt, k=4, block_range=block_range)
+    assert len(got) == len(exp)
+    for g, e in zip(got, exp):
+        np.testing.assert_array_equal(g, e)
+        assert g.dtype == np.int32

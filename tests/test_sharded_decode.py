@@ -1,0 +1,197 @@
+"""Multi-device SAGe: block-sharded residency + shard_map decode.
+
+The acceptance contract of the sharded hot path: sharded decode is
+bit-identical to the single-device reference for every format and both
+decode paths, the per-shard bucket padding keeps the zero-retrace
+guarantee, the mask contract holds per shard, and the k-mer token stream
+is invariant to the shard count.
+
+Multi-shard cases need >1 visible device — run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI sharded
+step does); on a single device only the degenerate shards=1 paths run.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.core import SageStore, reset_trace_counts, trace_counts
+from repro.core.decode_jax import decode_blocks_sharded, pad_block_ids
+from repro.data.pipeline import SageTokenPipeline
+from repro.distributed.sharding import block_shard_count, make_block_mesh
+
+NDEV = len(jax.devices())
+SHARDS = [s for s in (1, 2, 4) if s <= NDEV]
+
+
+@pytest.fixture(scope="module")
+def sharded_store():
+    from repro.genomics.synth import make_reference, sample_read_set
+
+    # seed 41 read set contains in-read N dropouts -> exercises the
+    # N-block-vs-PAD k-mer disambiguation across shard counts
+    ref = make_reference(30_000, seed=41)
+    rs = sample_read_set(ref, "illumina", depth=3, seed=42)
+    store = SageStore(max_prepared=2)
+    sf = store.write("ds", rs, ref, token_target=3072)
+    assert sf.meta.n_blocks >= 9
+    return store, sf
+
+
+# ------------------------------------------------------------- bucket math
+def test_pad_block_ids_rounds_to_bucket_times_shards():
+    ids, valid = pad_block_ids(np.arange(5), shards=4)
+    assert ids.size == 8  # bucket(ceil(5/4)) * 4 = 2 * 4
+    assert valid.tolist() == [1] * 5 + [0] * 3
+    ids, valid = pad_block_ids(np.arange(5), shards=2)
+    assert ids.size == 8  # bucket(3) * 2 = 4 * 2
+    ids, valid = pad_block_ids(np.arange(5))  # shards=1: the old rule
+    assert ids.size == 8 and valid.sum() == 5
+    ids, valid = pad_block_ids(np.arange(8), shards=4)  # already even
+    assert ids.size == 8 and valid.sum() == 8
+    with pytest.raises(ValueError):
+        pad_block_ids(np.arange(3), shards=0)
+
+
+@pytest.mark.skipif(NDEV < 4, reason="needs >=4 devices (force host devices)")
+def test_session_mesh_must_match_store_residency(sharded_store):
+    """Resident arrays are committed to the store mesh; a different session
+    mesh must be rejected eagerly, not die inside jit."""
+    _, sf = sharded_store
+    store = SageStore(shards=4)
+    store.register("ds", sf)
+    with pytest.raises(ValueError, match="residency mesh"):
+        store.session(shards=2)
+    store.session(shards=1)  # single-device decode over sharded residency: ok
+    store.session(shards=4)  # matching override: ok
+    with pytest.raises(ValueError, match="not both"):
+        store.session(mesh=store.mesh, shards=4)
+
+
+def test_bucketed_decode_rejects_conflicting_decoder_args(sharded_store):
+    store, _ = sharded_store
+    db = store.prepared("ds")
+    mesh = make_block_mesh(1)
+    with pytest.raises(ValueError, match="decoder_key"):
+        from repro.core.decode_jax import decode_blocks_bucketed
+        decode_blocks_bucketed(db, np.arange(2), mesh=mesh, decoder=lambda s: s)
+    with pytest.raises(ValueError, match="sharded path"):
+        from repro.core.decode_jax import decode_blocks_bucketed
+        decode_blocks_bucketed(db, np.arange(2), decoder_key=("pallas", ()))
+
+
+def test_make_block_mesh_rejects_oversubscription():
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_block_mesh(NDEV + 1)
+    mesh = make_block_mesh(1)
+    assert block_shard_count(mesh) == 1 and mesh.axis_names == ("blocks",)
+    assert block_shard_count(None) == 1
+
+
+# ------------------------------------------------- residency + bit-identity
+@pytest.mark.skipif(NDEV < 2, reason="needs >1 device (force host devices)")
+def test_residency_is_block_sharded(sharded_store):
+    _, sf = sharded_store
+    store = SageStore(shards=2)
+    store.register("ds", sf)
+    db = store.prepared("ds")
+    padded = db.n_blocks + (-db.n_blocks) % 2
+    for name, arr in db.arrays.items():
+        assert isinstance(arr.sharding, NamedSharding), name
+        assert arr.sharding.spec[0] == "blocks", name
+        assert arr.shape[0] == padded, name  # zero-padded to even shards
+        # each device holds only its shard of the (padded) block axis
+        shard_rows = {s.data.shape[0] for s in arr.addressable_shards}
+        assert shard_rows == {padded // 2}, name
+    assert db.mesh is not None
+
+
+@pytest.mark.parametrize("shards", SHARDS)
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("fmt", ["2bit", "onehot", "kmer"])
+def test_sharded_read_bit_identical(sharded_store, shards, use_pallas, fmt):
+    single_store, sf = sharded_store
+    ref_out = single_store.session().read("ds", fmt=fmt, kmer_k=4)
+    store = SageStore(shards=shards)
+    store.register("ds", sf)
+    sess = store.session(use_pallas=use_pallas)
+    out = sess.read("ds", fmt=fmt, kmer_k=4)
+    from repro.core import get_format
+
+    keys = ["tokens", "n_reads", "n_tokens", "read_start", "read_len",
+            "read_pos", get_format(fmt).out_key]
+    for key in keys:
+        np.testing.assert_array_equal(
+            np.asarray(out[key]), np.asarray(ref_out[key]), err_msg=key
+        )
+    # ranged + fancy-id reads match the whole-file slice
+    part = sess.read("ds", [6, 0, 3], fmt=fmt, kmer_k=4)
+    for key in keys:
+        np.testing.assert_array_equal(
+            np.asarray(part[key]), np.asarray(ref_out[key])[[6, 0, 3]], err_msg=key
+        )
+
+
+@pytest.mark.skipif(NDEV < 2, reason="needs >1 device (force host devices)")
+def test_sharded_mask_contract_pad_occupant_invariance(sharded_store):
+    _, sf = sharded_store
+    store = SageStore(shards=2)
+    store.register("ds", sf)
+    db = store.prepared("ds")
+    mesh = store.mesh
+    ids_a = np.asarray([2, 4, 1, 0, 5, 3], dtype=np.int64)
+    ids_b = np.asarray([2, 4, 1, 7, 8, 6], dtype=np.int64)
+    valid = np.asarray([1, 1, 1, 0, 0, 0], dtype=np.int32)
+    out_a = decode_blocks_sharded(db, ids_a, valid, mesh=mesh)
+    out_b = decode_blocks_sharded(db, ids_b, valid, mesh=mesh)
+    for key in out_a:
+        np.testing.assert_array_equal(
+            np.asarray(out_a[key]), np.asarray(out_b[key]), err_msg=key
+        )
+    assert (np.asarray(out_a["n_reads"])[3:] == 0).all()
+
+
+@pytest.mark.parametrize("shards", SHARDS)
+def test_sharded_reads_do_not_retrace_within_bucket(sharded_store, shards):
+    _, sf = sharded_store
+    store = SageStore(shards=shards)
+    store.register("ds", sf)
+    sess = store.session()
+    per = 2 * shards  # per-shard bucket 2: lengths in (shards, 2*shards]
+    sess.read("ds", (0, per))  # warm the bucket
+    reset_trace_counts()
+    sess.read("ds", (1, 1 + per))
+    sess.read("ds", list(range(shards + 1)) if shards > 1 else [1, 0])
+    counts = trace_counts()
+    assert counts.get("decode_shard", 0) == 0, counts
+    assert counts.get("decode_vmap", 0) == 0, counts
+
+
+# ------------------------------------------- k-mer stream shard invariance
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_kmer_stream_invariant_across_shards_and_paths(sharded_store, use_pallas):
+    """Same cursor -> same tokens, bit for bit, for shards in {1,2,4} x
+    decode path (the pipeline's deterministic-stream contract)."""
+    _, sf = sharded_store
+
+    def stream(shards, n_fetches=6):
+        p = SageTokenPipeline(sf, vocab_size=256, batch=2, seq_len=16,
+                              shards=shards if shards > 1 else None,
+                              use_pallas_decode=use_pallas, blocks_per_fetch=3)
+        chunks = [np.asarray(p._fetch_tokens()) for _ in range(n_fetches)]
+        return np.concatenate(chunks), p.cursor
+
+    ref_stream, ref_cursor = stream(1)
+    assert ref_stream.size > 0
+    for shards in SHARDS[1:]:
+        got, cursor = stream(shards)
+        np.testing.assert_array_equal(got, ref_stream, err_msg=f"shards={shards}")
+        assert cursor == ref_cursor
+    # and vs the vmap single-shard reference when we are the pallas variant
+    if use_pallas:
+        vm = SageTokenPipeline(sf, vocab_size=256, batch=2, seq_len=16,
+                               blocks_per_fetch=3)
+        chunks = [np.asarray(vm._fetch_tokens()) for _ in range(6)]
+        np.testing.assert_array_equal(np.concatenate(chunks), ref_stream)

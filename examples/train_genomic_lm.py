@@ -8,7 +8,10 @@ checkpointing + resume; ``--full`` selects the real architecture config
 """
 
 import argparse
+import os
+import shutil
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
@@ -54,11 +57,17 @@ def main() -> None:
     # per epoch and measurably learns it within a few hundred CPU steps
     ref = make_reference(24_000, seed=1)
     rs = sample_read_set(ref, "illumina", depth=10, seed=2)
-    store = SageStore()
-    sf = store.write("train", rs, ref, token_target=16384)  # SAGe_Write
+    # out-of-core data path: SAGe_Write to a v2 block-extent container and
+    # train from the lazy path — the pipeline streams block groups through
+    # a bounded host cache instead of materializing the dataset
+    store = SageStore(group_blocks=8)
+    v2_path = os.path.join(tempfile.mkdtemp(prefix="sage_lm_"), "train.sage2")
+    sf = store.write("train", rs, ref, token_target=16384,
+                     layout="v2", path=v2_path)
     pipe = SageTokenPipeline("train", cfg.vocab, args.batch, args.seq, store=store)
     ratio = rs.n_bases / sf.compressed_bytes(include_consensus=False)
-    print(f"data: {rs.n_bases/1e6:.1f} Mbases, SAGe ratio {ratio:.1f}x, k={pipe.k}")
+    print(f"data: {rs.n_bases/1e6:.1f} Mbases, SAGe ratio {ratio:.1f}x, k={pipe.k}, "
+          f"container {v2_path}")
 
     tc = TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 3, 50),
                        log_every=20, ckpt_dir=args.ckpt_dir)
@@ -69,6 +78,11 @@ def main() -> None:
     hist = trainer.run(pipeline=pipe)
     l0, l1 = hist[0]["loss"], hist[-1]["loss"]
     print(f"loss {l0:.3f} -> {l1:.3f} over {trainer.step} steps")
+    io = pipe.io_stats
+    print(f"io_stats: {io['extent_reads']} ranged reads, "
+          f"{io['extent_bytes_read']/1e6:.2f} MB extents read, host cache peak "
+          f"{io['cache_peak_bytes']/1e6:.2f} MB, whole-file loads: {io['container_loads']}")
+    shutil.rmtree(os.path.dirname(v2_path), ignore_errors=True)
     assert l1 < l0, "training must reduce loss"
 
 

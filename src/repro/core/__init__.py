@@ -30,4 +30,11 @@ from repro.core.decode_jax import (
 )
 from repro.core.encoder import SageEncoder
 from repro.core.format import BlockCaps, SageFile, SageMeta
+from repro.core.layout import (
+    HostExtentCache,
+    SageContainerV2,
+    container_version,
+    open_container,
+    write_v2,
+)
 from repro.core.store import SageReadSession, SageStore, StreamBatch, slice_device_blocks

@@ -135,8 +135,17 @@ def _apply_kmer(tokens, *, kmer_k, use_pallas=False, interpret=True, n_tokens=No
 _FORMATS: dict[str, FormatSpec] = {}
 
 
-def register_format(spec: FormatSpec) -> FormatSpec:
-    """Register (or replace) an output format; returns the spec."""
+def register_format(spec: FormatSpec, *, replace: bool = False) -> FormatSpec:
+    """Register an output format; returns the spec.
+
+    A name collision raises ``ValueError`` unless ``replace=True`` — silent
+    replacement would let a plugin shadow a built-in format and change the
+    meaning of every consumer's ``fmt=`` string."""
+    if spec.name in _FORMATS and not replace:
+        raise ValueError(
+            f"output format {spec.name!r} is already registered; pass "
+            f"replace=True to override it (registered: {available_formats()})"
+        )
     _FORMATS[spec.name] = spec
     return spec
 
@@ -152,7 +161,7 @@ def get_format(fmt) -> FormatSpec:
         return fmt
     key = fmt.value if isinstance(fmt, OutputFormat) else str(fmt)
     if key not in _FORMATS:
-        raise KeyError(f"unknown output format {key!r}; registered: {available_formats()}")
+        raise ValueError(f"unknown output format {key!r}; registered: {available_formats()}")
     return _FORMATS[key]
 
 

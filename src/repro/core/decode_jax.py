@@ -374,9 +374,33 @@ class DeviceBlocks:
         return dataclasses.replace(self, arrays=arrays, on_device=True, mesh=mesh)
 
 
-def _cap_words(sf: SageFile, s: str) -> int:
-    blk_bits = sf.meta.stream_bits.get(f"blk_{s}", 0)
+def stream_row_words(meta, s: str) -> int:
+    """Per-block row width (uint32 words) of stream ``s`` in the fixed-shape
+    block-major layout: the worst-case per-block bit count rounded up, plus
+    one slack word for the 64-bit extraction window."""
+    blk_bits = meta.stream_bits.get(f"blk_{s}", 0)
     return max(2, (blk_bits + 31) // 32 + 1)
+
+
+def block_row_widths(meta) -> dict[str, int]:
+    """Word width of every per-block row (streams + the consensus window) —
+    the column layout shared by :func:`prepare_block_arrays` and the v2
+    block-extent container (repro/core/layout.py)."""
+    widths = {s: stream_row_words(meta, s) for s in STREAMS}
+    widths["cons"] = meta.caps.window // 16
+    return widths
+
+
+def localize_directory(directory: np.ndarray, ids: Optional[np.ndarray] = None) -> np.ndarray:
+    """Block-local int32 directory rows for the device decoders.
+
+    ``base_pos`` is rewritten relative to the block's consensus window
+    (``base_pos - cons_start``) *before* the int32 cast, so device math stays
+    int32-safe regardless of genome size."""
+    rows = directory if ids is None else directory[np.asarray(ids, dtype=np.int64)]
+    dir32 = np.clip(rows, -(2**31), 2**31 - 1).astype(np.int32)
+    dir32[:, D["base_pos"]] = (rows[:, D["base_pos"]] - rows[:, D["cons_start"]]).astype(np.int32)
+    return dir32
 
 
 def _gather_rows(src: np.ndarray, starts: np.ndarray, width: int) -> np.ndarray:
@@ -391,36 +415,39 @@ def _gather_rows(src: np.ndarray, starts: np.ndarray, width: int) -> np.ndarray:
     return out
 
 
-def prepare_device_blocks(sf: SageFile) -> DeviceBlocks:
-    """Pack a SageFile into fixed-shape block-major arrays (host numpy).
+def prepare_block_arrays(sf: SageFile, ids: Optional[np.ndarray] = None) -> dict[str, np.ndarray]:
+    """Fixed-shape block-major host arrays for ``ids`` (all blocks when None).
 
     Fully vectorized: each stream is one strided gather over the flat
     bitstream (per-block word offsets come straight from the directory), so
-    preparation costs a memcpy, not a Python loop over blocks × streams."""
-    nb = sf.meta.n_blocks
-    caps = sf.meta.caps
+    preparation costs a memcpy, not a Python loop over blocks × streams.
+    This host gather defines the per-block row layout the v2 block-extent
+    container persists verbatim (repro/core/layout.py)."""
+    directory = sf.directory if ids is None else sf.directory[np.asarray(ids, dtype=np.int64)]
+    widths = block_row_widths(sf.meta)
     arrays: dict[str, np.ndarray] = {}
     for s in STREAMS:
-        offs = (sf.directory[:, D[f"off_{s}"]] >> 5).astype(np.int64)  # word aligned
+        offs = (directory[:, D[f"off_{s}"]] >> 5).astype(np.int64)  # word aligned
         arrays[s] = _gather_rows(
-            np.ascontiguousarray(sf.streams[s], dtype=np.uint32), offs, _cap_words(sf, s)
+            np.ascontiguousarray(sf.streams[s], dtype=np.uint32), offs, widths[s]
         )
     # consensus windows (2-bit packed, 16 bases/word)
-    w0 = (sf.directory[:, D["cons_start"]] // 16).astype(np.int64)
+    w0 = (directory[:, D["cons_start"]] // 16).astype(np.int64)
     arrays["cons"] = _gather_rows(
-        np.ascontiguousarray(sf.consensus2b, dtype=np.uint32), w0, caps.window // 16
+        np.ascontiguousarray(sf.consensus2b, dtype=np.uint32), w0, widths["cons"]
     )
-    # block-local directory (int32-safe: offsets are per-block word slices)
-    dir32 = np.clip(sf.directory, -(2**31), 2**31 - 1).astype(np.int32)
-    # base_pos must be block-local before casting (genome may exceed int32)
-    dir32[:, D["base_pos"]] = (sf.directory[:, D["base_pos"]] - sf.directory[:, D["cons_start"]]).astype(np.int32)
-    arrays["dir"] = dir32
+    arrays["dir"] = localize_directory(directory)
+    return arrays
+
+
+def prepare_device_blocks(sf: SageFile) -> DeviceBlocks:
+    """Pack a SageFile into fixed-shape block-major arrays (host numpy)."""
     return DeviceBlocks(
-        arrays=arrays,
-        caps=caps,
+        arrays=prepare_block_arrays(sf),
+        caps=sf.meta.caps,
         classes=sf.meta.classes,
         fixed_len=sf.meta.fixed_read_len,
-        n_blocks=nb,
+        n_blocks=sf.meta.n_blocks,
     )
 
 

@@ -147,11 +147,26 @@ class SageFile:
 
     @classmethod
     def load(cls, path: str | Path) -> "SageFile":
-        """Load a container; streams missing from the archive (e.g. ``leng``/
-        ``lena`` for fixed-read-length files) come back as empty arrays, which
-        every decoder treats as "no entries"."""
-        z = np.load(path)
-        meta = SageMeta.from_json(bytes(z["meta"]).decode())
-        empty = np.zeros(0, dtype=np.uint32)
-        streams = {k: (z[f"s_{k}"] if f"s_{k}" in z.files else empty) for k in STREAMS}
-        return cls(meta=meta, consensus2b=z["consensus2b"], directory=z["directory"], streams=streams)
+        """Load a v1 container; streams missing from the archive (e.g.
+        ``leng``/``lena`` for fixed-read-length files) come back as empty
+        arrays, which every decoder treats as "no entries". The archive
+        handle is closed before returning (every array is materialized
+        inside the context), so loading many files never accumulates open
+        descriptors."""
+        with np.load(path) as z:
+            meta = SageMeta.from_json(bytes(z["meta"]).decode())
+            empty = np.zeros(0, dtype=np.uint32)
+            streams = {k: (z[f"s_{k}"] if f"s_{k}" in z.files else empty) for k in STREAMS}
+            return cls(meta=meta, consensus2b=z["consensus2b"], directory=z["directory"], streams=streams)
+
+    @classmethod
+    def open(cls, path: str | Path):
+        """Open a container of either on-disk version.
+
+        v2 block-extent paths return the lazy header-only
+        :class:`repro.core.layout.SageContainerV2` handle (ranged block I/O
+        via ``gather_block_arrays``); v1 ``.npz`` paths fall back to the
+        eager whole-file :meth:`load`."""
+        from repro.core.layout import open_container  # local: layout imports us
+
+        return open_container(path)

@@ -1,0 +1,408 @@
+"""SAGe block-extent container **v2**: the out-of-core on-disk layout.
+
+The v1 container (``SageFile.save``, a monolithic ``np.savez_compressed``
+archive) forces every ranged read to decompress the *entire* dataset into
+host RAM — the data-preparation bottleneck the paper attacks, reintroduced
+one layer down. v2 is the software analogue of the paper's per-NAND-channel
+block partitions (§5.1/§5.4): each block's slice of all 14 streams plus its
+consensus window is one contiguous, alignment-padded **extent**, and a small
+header carries everything needed to plan a read, so opening a dataset costs
+O(header) and reading k blocks costs O(k) extent bytes.
+
+On-disk layout (all integers little-endian)::
+
+    offset 0   magic        b"SAGE2EXT"                              8 B
+           8   json_len     uint64                                   8 B
+          16   header json  meta + align + extent column widths      json_len B
+           +   directory    int64 (n_blocks, NDIR) raw               nb*NDIR*8 B
+           +   extent table int64 (n_blocks, 2) = (offset, nbytes)   nb*2*8 B
+           +   zero pad up to `align`
+    ---------------- extents (one per block, stride-aligned) ----------------
+          Ei   block i:  [mapg|mapa|...|esc|cons] uint32 rows, then pad
+         E{i+1} = Ei + stride,   stride = align_up(payload_nbytes, align)
+
+Each extent row is byte-identical to the corresponding row of
+:func:`repro.core.decode_jax.prepare_block_arrays` — a gathered group of
+extents *is* the decoder's block-major layout, so lazy ranged I/O feeds the
+device decoders with zero host re-packing, and v2 decode output is
+bit-identical to the v1 whole-file path by construction. The directory stays
+in the header (it is the read *planner*); the per-block ``dir`` rows handed
+to the decoder are derived from it on gather.
+
+``SageContainerV2.gather_block_arrays`` coalesces each run of adjacent
+extents into one ranged ``seek``/``read`` (the streaming-access pattern of
+§5.4) and counts every byte in ``io_stats`` so callers can assert read
+amplification. ``HostExtentCache`` is the byte-budget host cache the
+:class:`repro.core.store.SageStore` puts between disk and device residency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import OrderedDict
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.core.decode_jax import (
+    block_row_widths,
+    localize_directory,
+    prepare_block_arrays,
+)
+from repro.core.format import D, NDIR, STREAMS, SageFile, SageMeta
+
+MAGIC = b"SAGE2EXT"
+DEFAULT_ALIGN = 4096  # NAND-page-sized extent alignment
+_FIXED = len(MAGIC) + 8  # magic + uint64 json length
+
+#: column order of the per-block extent payload (uint32 words)
+EXTENT_KEYS = STREAMS + ("cons",)
+
+
+def align_up(n: int, a: int) -> int:
+    return -(-n // a) * a
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtentLayout:
+    """Column layout of one block extent: per-key uint32 word widths in
+    :data:`EXTENT_KEYS` order (persisted in the header, so readers never
+    have to re-derive it from the meta)."""
+
+    widths: tuple[tuple[str, int], ...]
+    align: int
+
+    @classmethod
+    def from_meta(cls, meta: SageMeta, align: int = DEFAULT_ALIGN) -> "ExtentLayout":
+        w = block_row_widths(meta)
+        return cls(widths=tuple((k, int(w[k])) for k in EXTENT_KEYS), align=int(align))
+
+    @property
+    def payload_words(self) -> int:
+        return sum(w for _, w in self.widths)
+
+    @property
+    def payload_nbytes(self) -> int:
+        return 4 * self.payload_words
+
+    @property
+    def stride_nbytes(self) -> int:
+        return align_up(self.payload_nbytes, self.align)
+
+    def column_offsets(self) -> dict[str, int]:
+        """Word offset of each key's column in the extent payload."""
+        offs, col = {}, 0
+        for k, w in self.widths:
+            offs[k] = col
+            col += w
+        return offs
+
+
+def new_io_stats() -> dict[str, int]:
+    """Zeroed I/O counter set shared by v2 readers (and aggregated per
+    store) — mirrors the pipeline's ``transfer_stats`` contract."""
+    return {
+        "opens": 0,
+        "header_bytes": 0,
+        "extent_reads": 0,  # ranged reads issued (coalesced runs)
+        "extent_bytes_read": 0,
+        "consensus_bytes_read": 0,
+        "blocks_fetched": 0,
+        "container_loads": 0,  # v1 whole-file materializations
+        "container_bytes_loaded": 0,
+    }
+
+
+# --------------------------------------------------------------------------
+# writer
+# --------------------------------------------------------------------------
+
+def write_v2(
+    sf: SageFile,
+    path: str | Path,
+    *,
+    align: int = DEFAULT_ALIGN,
+    chunk_blocks: int = 1024,
+) -> dict:
+    """Serialize ``sf`` as a v2 block-extent container; returns size stats.
+
+    Extents are produced ``chunk_blocks`` at a time through
+    :func:`prepare_block_arrays`, so writing never materializes more than a
+    chunk of block-major rows regardless of dataset size."""
+    if align < 4 or align % 4:
+        raise ValueError(f"align must be a positive multiple of 4, got {align}")
+    path = Path(path)
+    layout = ExtentLayout.from_meta(sf.meta, align)
+    nb = sf.meta.n_blocks
+    stride = layout.stride_nbytes
+    cons = np.ascontiguousarray(sf.consensus2b, dtype=np.uint32)
+    header = {
+        "meta": json.loads(sf.meta.to_json()),
+        "align": layout.align,
+        "widths": list(layout.widths),
+        "payload_nbytes": layout.payload_nbytes,
+        "stride_nbytes": stride,
+        "n_blocks": nb,
+        # the full 2-bit consensus lives in its own section: block extents
+        # carry their decode windows, so ranged reads never touch it; only
+        # whole-file materialization (to_sage_file) reads it back
+        "cons_nbytes": int(cons.nbytes),
+    }
+    hjson = json.dumps(header).encode()
+    header_nbytes = _FIXED + len(hjson) + nb * NDIR * 8 + nb * 2 * 8
+    cons_offset = align_up(header_nbytes, align)
+    data_start = align_up(cons_offset + cons.nbytes, align)
+    extents = np.empty((nb, 2), dtype=np.int64)
+    extents[:, 0] = data_start + stride * np.arange(nb, dtype=np.int64)
+    extents[:, 1] = layout.payload_nbytes
+    offsets = layout.column_offsets()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint64(len(hjson)).tobytes())
+        f.write(hjson)
+        f.write(np.ascontiguousarray(sf.directory, dtype=np.int64).tobytes())
+        f.write(extents.tobytes())
+        f.write(b"\0" * (cons_offset - f.tell()))
+        f.write(cons.tobytes())
+        f.write(b"\0" * (data_start - f.tell()))
+        for lo in range(0, nb, chunk_blocks):
+            ids = np.arange(lo, min(lo + chunk_blocks, nb), dtype=np.int64)
+            rows = prepare_block_arrays(sf, ids)
+            buf = np.zeros((ids.size, stride // 4), dtype=np.uint32)
+            for k, w in layout.widths:
+                buf[:, offsets[k] : offsets[k] + w] = rows[k]
+            f.write(buf.tobytes())
+        file_nbytes = f.tell()
+    return {
+        "n_blocks": nb,
+        "payload_nbytes": layout.payload_nbytes,
+        "stride_nbytes": stride,
+        "header_nbytes": header_nbytes,
+        "cons_nbytes": int(cons.nbytes),
+        "data_start": data_start,
+        "file_nbytes": file_nbytes,
+        "align": align,
+    }
+
+
+# --------------------------------------------------------------------------
+# lazy reader
+# --------------------------------------------------------------------------
+
+class SageContainerV2:
+    """Header-only handle on a v2 container with lazy ranged block I/O.
+
+    Construction reads *only* the header (meta + directory + extent table);
+    block bytes move off disk exclusively through
+    :meth:`gather_block_arrays`. No file descriptor is held between calls —
+    every gather opens, reads its coalesced ranges, and closes."""
+
+    def __init__(self, path: str | Path, *, io_stats: Optional[dict] = None) -> None:
+        self.path = Path(path)
+        self.io_stats = io_stats if io_stats is not None else new_io_stats()
+        with open(self.path, "rb") as f:
+            magic = f.read(len(MAGIC))
+            if magic != MAGIC:
+                raise ValueError(
+                    f"{self.path}: not a SAGe v2 container (magic {magic!r})"
+                )
+            (hlen,) = np.frombuffer(f.read(8), dtype=np.uint64)
+            header = json.loads(f.read(int(hlen)).decode())
+            self.meta = SageMeta.from_json(json.dumps(header["meta"]))
+            nb = int(header["n_blocks"])
+            self.directory = np.frombuffer(
+                f.read(nb * NDIR * 8), dtype=np.int64
+            ).reshape(nb, NDIR).copy()
+            self.extents = np.frombuffer(
+                f.read(nb * 2 * 8), dtype=np.int64
+            ).reshape(nb, 2).copy()
+            header_nbytes = f.tell()
+        self.layout = ExtentLayout(
+            widths=tuple((k, int(w)) for k, w in header["widths"]),
+            align=int(header["align"]),
+        )
+        self.stride_nbytes = int(header["stride_nbytes"])
+        self._cons_offset = align_up(header_nbytes, self.layout.align)
+        self._cons_nbytes = int(header["cons_nbytes"])
+        self.io_stats["opens"] += 1
+        self.io_stats["header_bytes"] += header_nbytes
+
+    @classmethod
+    def open(cls, path: str | Path, *, io_stats: Optional[dict] = None) -> "SageContainerV2":
+        return cls(path, io_stats=io_stats)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.meta.n_blocks
+
+    def gather_block_arrays(self, ids) -> dict[str, np.ndarray]:
+        """Block-major decoder arrays for ``ids`` — the lazy counterpart of
+        :func:`repro.core.decode_jax.prepare_block_arrays`.
+
+        Each run of adjacent extents is read with ONE ranged ``seek``/
+        ``read`` (alignment padding rides along inside a run; nothing else
+        is touched), so a k-block gather costs O(k) extent bytes however
+        the run boundaries fall. ``io_stats`` records every read."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.ndim != 1:
+            raise ValueError(f"block ids must be 1-D, got shape {ids.shape}")
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_blocks):
+            raise IndexError(
+                f"block ids out of bounds for {self.path} ({self.n_blocks} blocks)"
+            )
+        stride_w = self.stride_nbytes // 4
+        order = np.argsort(ids, kind="stable")
+        sids = ids[order]
+        buf = np.empty((ids.size, stride_w), dtype=np.uint32)
+        with open(self.path, "rb") as f:
+            i = 0
+            while i < sids.size:
+                j = i + 1
+                while j < sids.size and sids[j] == sids[j - 1] + 1:
+                    j += 1
+                f.seek(int(self.extents[sids[i], 0]))
+                nbytes = (j - i) * self.stride_nbytes
+                data = f.read(nbytes)
+                buf[i:j] = np.frombuffer(data, dtype=np.uint32).reshape(j - i, stride_w)
+                self.io_stats["extent_reads"] += 1
+                self.io_stats["extent_bytes_read"] += nbytes
+                i = j
+        self.io_stats["blocks_fetched"] += int(ids.size)
+        if not np.array_equal(sids, ids):
+            buf = buf[np.argsort(order, kind="stable")]  # back to request order
+        offsets = self.layout.column_offsets()
+        arrays = {k: buf[:, offsets[k] : offsets[k] + w] for k, w in self.layout.widths}
+        arrays["dir"] = localize_directory(self.directory, ids)
+        return arrays
+
+    def read_consensus(self) -> np.ndarray:
+        """The full 2-bit-packed consensus (its own ranged section — block
+        extents carry their decode windows, so ordinary ranged reads never
+        touch this)."""
+        with open(self.path, "rb") as f:
+            f.seek(self._cons_offset)
+            data = f.read(self._cons_nbytes)
+        self.io_stats["consensus_bytes_read"] += self._cons_nbytes
+        return np.frombuffer(data, dtype=np.uint32).copy()
+
+    def to_sage_file(self, *, chunk_blocks: int = 1024) -> SageFile:
+        """Materialize the full v1 in-memory form (compat / back-migration).
+
+        Scatters each block's extent rows back onto the flat streams at the
+        directory offsets; overlapping rows are copies of the same source
+        words, so the reconstruction is bit-identical to the original."""
+        meta = self.meta
+        words = {s: (meta.stream_bits.get(s, 0) + 31) // 32 for s in STREAMS}
+        streams = {s: np.zeros(words[s], dtype=np.uint32) for s in STREAMS}
+        for lo in range(0, self.n_blocks, chunk_blocks):
+            ids = np.arange(lo, min(lo + chunk_blocks, self.n_blocks), dtype=np.int64)
+            rows = self.gather_block_arrays(ids)
+            for bi, b in enumerate(ids):
+                for s in STREAMS:
+                    off = int(self.directory[b, D[f"off_{s}"]]) >> 5
+                    n = min(rows[s].shape[1], words[s] - off)
+                    if n > 0:
+                        streams[s][off : off + n] = rows[s][bi, :n]
+        return SageFile(
+            meta=meta,
+            consensus2b=self.read_consensus(),
+            directory=self.directory.copy(),
+            streams=streams,
+        )
+
+
+# --------------------------------------------------------------------------
+# version sniffing
+# --------------------------------------------------------------------------
+
+def container_version(path: str | Path) -> int:
+    """1 for a v1 ``.npz`` archive, 2 for a v2 block-extent container.
+
+    Sniffs the leading magic bytes; raises ``ValueError`` for anything
+    else (including empty/truncated files)."""
+    path = Path(path)
+    with open(path, "rb") as f:
+        head = f.read(len(MAGIC))
+    if head == MAGIC:
+        return 2
+    if head[:4] == b"PK\x03\x04":  # zip archive == numpy .npz
+        return 1
+    raise ValueError(
+        f"{path}: not a SAGe container (leading bytes {head!r}; expected a "
+        f"v1 .npz archive or a v2 {MAGIC!r} block-extent container)"
+    )
+
+
+def open_container(path: str | Path):
+    """Open a container of either version: v2 paths return the lazy
+    :class:`SageContainerV2` handle (header-only I/O); v1 paths fall back to
+    the eager whole-file :meth:`SageFile.load`."""
+    if container_version(path) == 2:
+        return SageContainerV2.open(path)
+    return SageFile.load(path)
+
+
+# --------------------------------------------------------------------------
+# host-side extent cache (byte budget)
+# --------------------------------------------------------------------------
+
+class HostExtentCache:
+    """Byte-budget LRU over host block-group arrays.
+
+    Sits between the v2 containers and device residency: a device-evicted
+    group whose extents are still cached re-uploads without touching disk.
+    ``budget`` bounds resident bytes UNCONDITIONALLY (``None`` =
+    unbounded): an entry that alone exceeds the budget is not cached at
+    all (``cache_oversize_skips`` counts them) — re-reading it from disk
+    is the out-of-core-correct fallback, blowing the host budget is not."""
+
+    def __init__(self, budget: Optional[int]) -> None:
+        if budget is not None and budget < 0:
+            raise ValueError(f"cache_budget must be >= 0 or None, got {budget}")
+        self.budget = budget
+        self._entries: "OrderedDict[tuple, tuple[dict, int]]" = OrderedDict()
+        self.stats = {
+            "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
+            "cache_oversize_skips": 0, "cache_bytes": 0, "cache_peak_bytes": 0,
+        }
+
+    def get(self, key) -> Optional[dict]:
+        hit = self._entries.get(key)
+        if hit is None:
+            self.stats["cache_misses"] += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats["cache_hits"] += 1
+        return hit[0]
+
+    def put(self, key, arrays: dict, nbytes: int) -> None:
+        if key in self._entries:
+            self.stats["cache_bytes"] -= self._entries.pop(key)[1]
+        if self.budget is not None and nbytes > self.budget:
+            self.stats["cache_oversize_skips"] += 1
+            return
+        # make room FIRST: resident bytes never exceed the budget, even
+        # transiently (the out-of-core pipeline asserts this via peak_bytes)
+        while (
+            self.budget is not None
+            and self.stats["cache_bytes"] + nbytes > self.budget
+        ):
+            _, (_, evicted) = self._entries.popitem(last=False)
+            self.stats["cache_bytes"] -= evicted
+            self.stats["cache_evictions"] += 1
+        self._entries[key] = (arrays, nbytes)
+        self.stats["cache_bytes"] += nbytes
+        self.stats["cache_peak_bytes"] = max(
+            self.stats["cache_peak_bytes"], self.stats["cache_bytes"]
+        )
+
+    def drop(self, name: Optional[str] = None) -> None:
+        """Invalidate entries for dataset ``name`` (all when None)."""
+        keys = [k for k in self._entries if name is None or k[0] == name]
+        for k in keys:
+            self.stats["cache_bytes"] -= self._entries.pop(k)[1]
+
+    def __len__(self) -> int:
+        return len(self._entries)

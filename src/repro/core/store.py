@@ -35,8 +35,11 @@ from pathlib import Path
 from typing import Callable, Iterator, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
+
+import os
 
 from repro.core.api import apply_format, get_format
 from repro.core.bitio import unpack_2bit_batch
@@ -46,8 +49,15 @@ from repro.core.decode_jax import (
     prepare_device_blocks,
 )
 from repro.core.encoder import SageEncoder
-from repro.core.format import D, SageFile
-from repro.distributed.sharding import make_block_mesh
+from repro.core.format import D, SageFile, SageMeta
+from repro.core.layout import (
+    HostExtentCache,
+    SageContainerV2,
+    container_version,
+    new_io_stats,
+    write_v2,
+)
+from repro.distributed.sharding import block_shard_count, make_block_mesh
 
 BlockRange = Union[None, int, tuple, Sequence[int]]
 
@@ -102,7 +112,17 @@ class SageStore:
     dataset's block axis is sharded across the mesh — each device holds and
     decodes only its block partition, the paper's per-NAND-channel layout
     mapped onto the device mesh. Default (no mesh) is the single-device
-    behavior, unchanged."""
+    behavior, unchanged.
+
+    Residency is **block-granular** for out-of-core (v2 block-extent)
+    datasets: the device LRU keys on ``(dataset, block_group)`` — groups of
+    ``group_blocks`` blocks — and a byte-budget host extent cache
+    (``cache_budget``) sits beneath it, so a ranged read touches only the
+    requested blocks' bytes end-to-end: disk -> host cache -> device shard.
+    Eager sources (in-memory SageFiles, v1 ``.npz`` paths) keep whole-file
+    residency under the same LRU (key ``(dataset, None)``). ``io_stats``
+    counts every container byte moved (mirroring the pipeline's
+    ``transfer_stats``) so consumers can assert read amplification."""
 
     def __init__(
         self,
@@ -110,24 +130,59 @@ class SageStore:
         *,
         mesh: Optional[Mesh] = None,
         shards: Optional[int] = None,
+        group_blocks: int = 32,
+        cache_budget: Optional[int] = 256 * 2**20,
     ) -> None:
         if max_prepared < 1:
             raise ValueError("max_prepared must be >= 1")
+        if group_blocks < 1:
+            raise ValueError("group_blocks must be >= 1")
         self.max_prepared = max_prepared
         self.mesh = _resolve_mesh(mesh, shards)
+        self.group_blocks = group_blocks
         self.last_write_stats: dict = {}
         self._sources: dict[str, Union[SageFile, str]] = {}
         self._files: dict[str, SageFile] = {}
-        self._prepared: "OrderedDict[str, DeviceBlocks]" = OrderedDict()
+        self._readers: dict[str, SageContainerV2] = {}
+        self._not_v2: set[str] = set()  # cached sniff verdicts for eager sources
+        self._prepared: "OrderedDict[tuple, DeviceBlocks]" = OrderedDict()
+        self._io = new_io_stats()
+        self._io["group_uploads"] = 0
+        self._extent_cache = HostExtentCache(cache_budget)
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- registration
     def register(self, name: str, src: Union[SageFile, str, Path]) -> None:
-        """Register a dataset: an in-memory SageFile or a path loaded lazily."""
+        """Register a dataset: an in-memory SageFile or a container path.
+
+        Paths are validated eagerly — the file must exist and carry a
+        recognizable container magic — so a typo fails here, naming the
+        dataset, instead of at the first read. v2 block-extent paths stay
+        lazy (header-only open on first access); v1 ``.npz`` paths load
+        whole-file on first access."""
+        if not isinstance(src, SageFile):
+            src = str(src)
+            if not Path(src).is_file():
+                raise FileNotFoundError(
+                    f"dataset {name!r}: container path {src!r} does not exist"
+                )
+            try:
+                container_version(src)
+            except ValueError as e:
+                raise ValueError(f"dataset {name!r}: {e}") from None
         with self._lock:
-            self._sources[name] = src if isinstance(src, SageFile) else str(src)
+            self._sources[name] = src
             self._files.pop(name, None)
-            self._prepared.pop(name, None)
+            self._readers.pop(name, None)
+            self._not_v2.discard(name)
+            self._extent_cache.drop(name)
+            for key in [k for k in self._prepared if k[0] == name]:
+                self._prepared.pop(key)
+
+    def source(self, name: str) -> Union[SageFile, str, None]:
+        """The raw registered source for ``name`` (None when unregistered)."""
+        with self._lock:
+            return self._sources.get(name)
 
     def write(
         self,
@@ -137,6 +192,9 @@ class SageStore:
         token_target: int = 65536,
         batched: bool = True,
         verify: bool = True,
+        layout: str = "memory",
+        path: Union[str, Path, None] = None,
+        align: int = 4096,
         **enc_kwargs,
     ) -> SageFile:
         """SAGe_Write: compress ``read_set`` against ``consensus`` and register
@@ -147,61 +205,277 @@ class SageStore:
         decode-round-trip losslessness check; ``batched=False`` runs the
         sequential reference encoder (bit-identical output, orders of
         magnitude slower — see ``benchmarks/encode_bench.py``). Encoder
-        phase timings land in ``self.last_write_stats``."""
+        phase timings land in ``self.last_write_stats``.
+
+        ``layout`` picks the registered form: ``"memory"`` (default)
+        registers the in-memory SageFile; ``"v1"`` saves the monolithic
+        ``.npz`` archive at ``path``; ``"v2"`` writes the out-of-core
+        block-extent container at ``path`` (alignment ``align``) and
+        registers the lazy path, so subsequent reads are ranged."""
+        if layout not in ("memory", "v1", "v2"):
+            raise ValueError(f"layout must be 'memory', 'v1', or 'v2', got {layout!r}")
+        if layout != "memory" and path is None:
+            raise ValueError(f"store.write(layout={layout!r}) needs path=")
         enc = SageEncoder(
             consensus, token_target=token_target, batched=batched,
             verify=verify, **enc_kwargs,
         )
         sf = enc.encode(read_set)
         self.last_write_stats = dict(enc.stats)
-        self.register(name, sf)
+        if layout == "v2":
+            self.last_write_stats["container"] = write_v2(sf, path, align=align)
+            self.register(name, path)
+        elif layout == "v1":
+            sf.save(path)
+            self.register(name, path)
+        else:
+            self.register(name, sf)
         return sf
 
     def names(self) -> tuple[str, ...]:
         return tuple(self._sources)
 
     def evict(self, name: Optional[str] = None) -> None:
-        """Drop prepared device state (all datasets when ``name`` is None)."""
+        """Drop prepared device state (all datasets when ``name`` is None).
+        Block-group residencies of ``name`` are dropped along with any
+        whole-file residency; the host extent cache is left intact (use
+        ``register`` to invalidate it)."""
         with self._lock:
             if name is None:
                 self._prepared.clear()
             else:
-                self._prepared.pop(name, None)
+                for key in [k for k in self._prepared if k[0] == name]:
+                    self._prepared.pop(key)
 
     @property
     def prepared_names(self) -> tuple[str, ...]:
-        """Datasets currently device-prepared, LRU order (oldest first)."""
+        """Datasets with whole-file device residency, LRU order (oldest
+        first). Block-granular residencies are listed by ``prepared_keys``."""
+        return tuple(k[0] for k in self._prepared if k[1] is None)
+
+    @property
+    def prepared_keys(self) -> tuple[tuple, ...]:
+        """Every device residency key, LRU order: ``(name, None)`` for
+        whole-file entries, ``(name, group_index)`` for block groups."""
         return tuple(self._prepared)
 
+    @property
+    def io_stats(self) -> dict:
+        """Container I/O counters (disk bytes, ranged reads, host extent
+        cache traffic) — the storage-level mirror of the pipeline's
+        ``transfer_stats``. Snapshot; mutate via ``reset_io_stats``."""
+        d = dict(self._io)
+        d.update(self._extent_cache.stats)
+        return d
+
+    def reset_io_stats(self) -> None:
+        """Zero the I/O counters (current cache residency bytes are kept —
+        they describe state, not traffic — but the peak is rebased)."""
+        with self._lock:
+            for k in self._io:
+                self._io[k] = 0
+            st = self._extent_cache.stats
+            for k in st:
+                if k not in ("cache_bytes", "cache_peak_bytes"):
+                    st[k] = 0
+            st["cache_peak_bytes"] = st["cache_bytes"]
+
     # --------------------------------------------------------------- access
+    def _reader(self, name: str) -> Optional[SageContainerV2]:
+        """Lazy v2 container handle for ``name`` (None for eager sources).
+
+        The sniff verdict is cached both ways: eager (v1/in-memory) sources
+        never touch the path again once decided — a v1 file that vanishes
+        after its one-time load keeps serving from the ``_files`` cache."""
+        with self._lock:
+            if name in self._readers:
+                return self._readers[name]
+            if name in self._not_v2:
+                return None
+            src = self._sources.get(name)
+            if src is None:
+                raise KeyError(f"dataset {name!r} not registered; have {self.names()}")
+            if isinstance(src, SageFile) or container_version(src) != 2:
+                self._not_v2.add(name)
+                return None
+            r = SageContainerV2.open(src, io_stats=self._io)
+            self._readers[name] = r
+            return r
+
     def file(self, name: str) -> SageFile:
+        """The dataset as an in-memory SageFile.
+
+        For v2 sources this MATERIALIZES the whole container (compat /
+        migration path) — out-of-core consumers use ``meta``/``directory``
+        and the ranged read path instead."""
         with self._lock:
             if name not in self._files:
-                src = self._sources.get(name)
-                if src is None:
-                    raise KeyError(f"dataset {name!r} not registered; have {self.names()}")
-                self._files[name] = src if isinstance(src, SageFile) else SageFile.load(src)
+                r = self._reader(name)
+                if r is not None:
+                    self._files[name] = r.to_sage_file()
+                else:
+                    src = self._sources[name]
+                    if isinstance(src, SageFile):
+                        self._files[name] = src
+                    else:
+                        self._files[name] = SageFile.load(src)
+                        self._io["container_loads"] += 1
+                        self._io["container_bytes_loaded"] += os.path.getsize(src)
             return self._files[name]
 
+    def meta(self, name: str) -> SageMeta:
+        """Dataset meta without materializing the container (header-only
+        for v2 sources)."""
+        r = self._reader(name)
+        return r.meta if r is not None else self.file(name).meta
+
+    def directory(self, name: str) -> np.ndarray:
+        """The (n_blocks, NDIR) int64 block directory, header-only for v2."""
+        r = self._reader(name)
+        return r.directory if r is not None else self.file(name).directory
+
     def prepared(self, name: str) -> DeviceBlocks:
-        """Device-resident DeviceBlocks for ``name`` (LRU-cached).
+        """Whole-file device-resident DeviceBlocks for ``name`` (LRU-cached).
 
         Preparation (host gather) and upload (``jax.device_put``) happen
         once per LRU residency; every subsequent read gathers and decodes
         entirely on device. With a store mesh the upload shards the block
-        axis, so each device's residency is only its block partition."""
+        axis, so each device's residency is only its block partition.
+        For v2 sources this materializes everything — the ranged hot path
+        (``prepared_for``) keeps residency block-granular instead."""
+        key = (name, None)
         with self._lock:
-            if name in self._prepared:
-                self._prepared.move_to_end(name)
-                return self._prepared[name]
+            if key in self._prepared:
+                self._prepared.move_to_end(key)
+                return self._prepared[key]
             db = prepare_device_blocks(self.file(name)).to_device(mesh=self.mesh)
-            self._prepared[name] = db
-            while len(self._prepared) > self.max_prepared:
-                self._prepared.popitem(last=False)
+            self._insert_prepared(key, db)
             return db
 
+    def _insert_prepared(self, key: tuple, db: DeviceBlocks) -> None:
+        self._prepared[key] = db
+        while len(self._prepared) > self.max_prepared:
+            self._prepared.popitem(last=False)
+
+    def _group_stride(self) -> int:
+        """Device rows per resident block group: ``group_blocks`` padded up
+        to the mesh shard count so every group shards evenly and group
+        concatenation keeps a uniform row stride."""
+        g = self.group_blocks
+        return g + (-g) % block_shard_count(self.mesh)
+
+    def _prepared_group(self, name: str, gi: int) -> DeviceBlocks:
+        """Device residency for block group ``gi`` of a lazy dataset.
+
+        Miss path: ranged-read the group's extents (through the host extent
+        cache), zero-pad the ragged tail group to the uniform stride, and
+        upload once (sharded under the store mesh). The host cache keeps the
+        padded arrays, so a device-evicted group re-uploads without disk."""
+        key = (name, gi)
+        with self._lock:
+            if key in self._prepared:
+                self._prepared.move_to_end(key)
+                return self._prepared[key]
+            r = self._reader(name)
+            if r is None:
+                # the dataset was re-registered onto an eager source between
+                # the caller's reader check and this lock acquisition; the
+                # old lazy state is gone — a clear error beats serving a mix
+                raise RuntimeError(
+                    f"dataset {name!r} was re-registered while a lazy read "
+                    f"was in flight; retry the read"
+                )
+            stride = self._group_stride()
+            arrays = self._extent_cache.get(key)
+            if arrays is None:
+                lo = gi * self.group_blocks
+                hi = min(lo + self.group_blocks, r.meta.n_blocks)
+                arrays = r.gather_block_arrays(np.arange(lo, hi, dtype=np.int64))
+                if hi - lo < stride:
+                    pad = stride - (hi - lo)
+                    arrays = {
+                        k: np.concatenate(
+                            [v, np.zeros((pad,) + v.shape[1:], dtype=v.dtype)]
+                        )
+                        for k, v in arrays.items()
+                    }
+                # the gather returns column VIEWS into one stride-aligned read
+                # buffer; caching those would pin the whole buffer (alignment
+                # pad included) while the budget only counted the payload.
+                # Copy each column so cached bytes == accounted bytes.
+                arrays = {k: np.ascontiguousarray(v) for k, v in arrays.items()}
+                self._extent_cache.put(
+                    key, arrays, int(sum(v.nbytes for v in arrays.values()))
+                )
+            db = DeviceBlocks(
+                arrays=arrays,
+                caps=r.meta.caps,
+                classes=r.meta.classes,
+                fixed_len=r.meta.fixed_read_len,
+                n_blocks=stride,
+                on_device=False,
+            ).to_device(mesh=self.mesh)
+            self._io["group_uploads"] += 1
+            self._insert_prepared(key, db)
+            return db
+
+    def prepared_for(self, name: str, ids) -> tuple[DeviceBlocks, np.ndarray]:
+        """Device residency covering ``ids`` + local row indices into it.
+
+        Eager sources return the whole-file residency with ``ids``
+        unchanged. Lazy (v2) sources resolve the covering block groups and
+        make each device-resident independently (``(name, group)`` LRU
+        entries). A single covering group is returned as-is; a multi-group
+        request gathers only the REQUESTED rows out of each resident group
+        and concatenates those (device-side ops, O(len(ids)) rows copied —
+        never whole groups; no host transfer). Only the covering groups'
+        extent bytes ever leave disk."""
+        ids = np.asarray(ids, dtype=np.int64)
+        r = self._reader(name)
+        if r is None:
+            return self.prepared(name), ids
+        nb = r.meta.n_blocks
+        if ids.size and (ids.min() < 0 or ids.max() >= nb):
+            raise IndexError(
+                f"block ids out of bounds for dataset {name!r} ({nb} blocks)"
+            )
+        if ids.size == 0:
+            return (
+                DeviceBlocks(arrays={}, caps=r.meta.caps, classes=r.meta.classes,
+                             fixed_len=r.meta.fixed_read_len, n_blocks=0,
+                             on_device=True, mesh=self.mesh),
+                ids,
+            )
+        g = self.group_blocks
+        gids = ids // g
+        gis = sorted(set(gids.tolist()))
+        dbs = {gi: self._prepared_group(name, gi) for gi in gis}
+        if len(gis) == 1:
+            return dbs[gis[0]], ids % g
+        # stable group-sort, gather each group's requested rows once, and
+        # invert the permutation — all index math vectorized on host
+        sidx = np.argsort(gids, kind="stable")
+        sorted_ids, sorted_gids = ids[sidx], gids[sidx]
+        parts = [
+            {
+                k: v[jnp.asarray(sorted_ids[sorted_gids == gi] % g, jnp.int32)]
+                for k, v in dbs[gi].arrays.items()
+            }
+            for gi in gis
+        ]
+        arrays = {k: jnp.concatenate([p[k] for p in parts], axis=0) for k in parts[0]}
+        local = np.empty(ids.size, dtype=np.int64)
+        local[sidx] = np.arange(ids.size, dtype=np.int64)
+        first = dbs[gis[0]]
+        db = DeviceBlocks(
+            arrays=arrays, caps=first.caps, classes=first.classes,
+            fixed_len=first.fixed_len, n_blocks=ids.size,
+            on_device=True, mesh=self.mesh,
+        )
+        return db, local
+
     def n_blocks(self, name: str) -> int:
-        return self.file(name).meta.n_blocks
+        return self.meta(name).n_blocks
 
     def consensus_windows(self, name: str, ids: Sequence[int]) -> tuple[np.ndarray, np.ndarray]:
         """Per-block consensus windows as base codes.
@@ -210,19 +484,24 @@ class SageStore:
         starts is the global consensus coordinate of each window's base 0
         (for localizing the decoder's global ``read_pos``). One batched
         unpack over the prepared ``cons`` rows — the only host transfer is
-        the selected rows themselves."""
-        db = self.prepared(name)
+        the selected rows themselves (and for lazy datasets only the
+        covering block groups are ever made resident)."""
         ids = np.asarray(ids, dtype=np.int64)
-        if ids.size and (ids.min() < 0 or ids.max() >= db.n_blocks):
+        nb = self.n_blocks(name)
+        if ids.size and (ids.min() < 0 or ids.max() >= nb):
             # device arrays clamp out-of-bounds gathers; keep the host
             # numpy contract of refusing bad block ids
             raise IndexError(
                 f"block ids {ids} out of bounds for dataset {name!r} "
-                f"({db.n_blocks} blocks)"
+                f"({nb} blocks)"
             )
-        rows = np.asarray(db.arrays["cons"][ids])
+        if ids.size == 0:
+            caps = self.meta(name).caps
+            return np.zeros((0, caps.window), np.int8), np.zeros((0,), np.int64)
+        db, local = self.prepared_for(name, ids)
+        rows = np.asarray(db.arrays["cons"][local])
         wins = unpack_2bit_batch(rows, db.caps.window).astype(np.int8)
-        starts = np.asarray(db.arrays["dir"][ids, D["cons_start"]]).astype(np.int64)
+        starts = np.asarray(db.arrays["dir"][local, D["cons_start"]]).astype(np.int64)
         return wins, starts
 
     def session(
@@ -341,16 +620,21 @@ class SageReadSession:
 
         With a session mesh the same contract holds per shard: ids pad to
         bucket x shards, each device decodes its lane shard under
-        ``shard_map``, and the returned arrays are block-sharded."""
+        ``shard_map``, and the returned arrays are block-sharded.
+
+        Out-of-core (v2) datasets resolve residency block-granularly: only
+        the block groups covering ``block_range`` are fetched (ranged
+        extent reads through the host cache) and uploaded; the decode then
+        gathers the requested lanes out of those resident groups."""
         ids = self.resolve_blocks(name, block_range)
-        db = self.store.prepared(name)
+        db, local = self.store.prepared_for(name, ids)
         path = (
             dict(mesh=self.mesh, decoder_key=self._decoder_key())
             if self.mesh is not None
             else dict(decoder=self._decoder(db))
         )
         out = decode_blocks_bucketed(
-            db, ids,
+            db, local,
             postprocess=lambda dec: apply_format(
                 dec, fmt, kmer_k=kmer_k, use_pallas=self.use_pallas,
                 interpret=self.interpret, context=f"SAGe_Read({name!r})",

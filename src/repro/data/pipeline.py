@@ -83,7 +83,7 @@ class SageTokenPipeline:
                 "residency sharding is store-level state"
             )
         if isinstance(source, SageFile):
-            if store is not None and name in store.names() and store.file(name) is not source:
+            if store is not None and name in store.names() and store.source(name) is not source:
                 raise ValueError(
                     f"dataset {name!r} already registered in the store with a different "
                     f"source; pass a unique name= to avoid clobbering it"
@@ -96,8 +96,9 @@ class SageTokenPipeline:
                 raise ValueError("named dataset source requires a store")
             self.store, self.name = store, source
         self.session: SageReadSession = self.store.session(use_pallas=use_pallas_decode)
-        sf = self.store.file(self.name)
-        self.sf = sf
+        # header-only metadata access: an out-of-core (v2) source must never
+        # be materialized whole just to size the cursor math
+        directory = self.store.directory(self.name)
         self.k = pick_k(vocab_size)
         self.sp = kmer_special_ids(self.k)
         self.batch = batch
@@ -117,7 +118,15 @@ class SageTokenPipeline:
         # deterministic k-mer count per block: the k-mer format maps every
         # group at/past n_tokens to the pad id and nothing before it, so
         # exactly n_tokens // k leading groups per block are real
-        self._kpb = (np.asarray(sf.directory[:, D["n_tokens"]]) // self.k).astype(np.int64)
+        self._kpb = (np.asarray(directory[:, D["n_tokens"]]) // self.k).astype(np.int64)
+
+    @property
+    def io_stats(self) -> dict:
+        """Container-I/O counters of the backing store (disk bytes, ranged
+        reads, extent-cache traffic) — with an out-of-core source, restarting
+        from a cursor reads only the blocks the stream actually touches,
+        never more than the store's ``cache_budget`` host bytes at once."""
+        return self.store.io_stats
 
     # ------------------------------------------------------------------
     def _gather_index(self, ids: tuple) -> tuple:

@@ -1,0 +1,80 @@
+"""FormatSpec registry edge cases: every misuse raises a *typed*
+``ValueError`` (never a bare assert or KeyError) so store consumers can
+handle format errors uniformly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FormatSpec,
+    OutputFormat,
+    SageStore,
+    available_formats,
+    get_format,
+    register_format,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_store(illumina_encoded):
+    _, sf = illumina_encoded
+    store = SageStore()
+    store.register("ds", sf)
+    return store
+
+
+def test_register_format_name_collision_raises():
+    with pytest.raises(ValueError, match="already registered.*replace=True"):
+        register_format(FormatSpec("2bit", "tokens", None))
+    assert "2bit" in available_formats()  # original untouched
+
+
+def test_register_format_replace_opt_in():
+    orig = get_format("2bit")
+    stub = FormatSpec("2bit", "tokens", None, doc="shadow")
+    try:
+        assert register_format(stub, replace=True) is stub
+        assert get_format("2bit").doc == "shadow"
+    finally:
+        register_format(orig, replace=True)
+    assert get_format("2bit") is orig
+
+
+def test_new_format_registers_and_reads(tiny_store):
+    spec = FormatSpec(
+        "rc2bit", "rc2bit",
+        lambda tokens, **kw: np.where(tokens < 4, 3 - tokens, tokens),
+        doc="reverse-complement codes",
+    )
+    register_format(spec)
+    try:
+        out = tiny_store.session().read("ds", (0, 2), fmt="rc2bit")
+        toks = np.asarray(out["tokens"])
+        np.testing.assert_array_equal(
+            np.asarray(out["rc2bit"]), np.where(toks < 4, 3 - toks, toks)
+        )
+    finally:
+        from repro.core.api import _FORMATS
+
+        _FORMATS.pop("rc2bit", None)
+
+
+def test_unknown_format_in_session_read_is_valueerror(tiny_store):
+    sess = tiny_store.session()
+    with pytest.raises(ValueError, match="unknown output format 'bogus'"):
+        sess.read("ds", (0, 1), fmt="bogus")
+    with pytest.raises(ValueError, match="unknown output format"):
+        list(sess.read_stream("ds", fmt="bogus"))  # validated eagerly too
+    with pytest.raises(ValueError):
+        get_format("bogus")
+
+
+def test_kmer_without_k_is_valueerror(tiny_store):
+    sess = tiny_store.session()
+    with pytest.raises(ValueError, match=r"SAGe_Read\('ds'\).*requires kmer_k"):
+        sess.read("ds", (0, 1), fmt="kmer")
+    # the legacy enum spelling routes through the same registry + error
+    with pytest.raises(ValueError, match="requires kmer_k"):
+        sess.read("ds", (0, 1), fmt=OutputFormat.KMER)
+    assert get_format(OutputFormat.KMER).name == "kmer"

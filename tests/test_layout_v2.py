@@ -1,0 +1,393 @@
+"""Out-of-core v2 block-extent container: layout round trip, lazy ranged
+I/O, block-granular store residency, and the cold-restart pipeline path.
+
+Acceptance contract (ISSUE 5): v2 ``gather_blocks`` -> decode is
+bit-identical to the v1 whole-file decode for every format and both decode
+paths (+ sharded mesh, when the process has devices); ``io_stats`` proves a
+ranged read of k blocks costs O(k) extent bytes + header, never the whole
+container. Small ``cache_budget``/``group_blocks`` values are used
+throughout so eviction paths actually execute (the CI out-of-core job runs
+this file specifically for that).
+"""
+
+import importlib.util
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import SageStore
+from repro.core.encoder import SageEncoder
+from repro.core.format import STREAMS, SageFile
+from repro.core.layout import (
+    SageContainerV2,
+    container_version,
+    open_container,
+    write_v2,
+)
+from repro.data.pipeline import SageTokenPipeline
+from repro.genomics.synth import make_reference, sample_read_set
+
+
+@pytest.fixture(scope="module")
+def v2_setup(tmp_path_factory):
+    """One encoded dataset + its v2 container on disk + a v1 reference store."""
+    ref = make_reference(30_000, seed=70)
+    rs = sample_read_set(ref, "illumina", depth=4, seed=71)
+    sf = SageEncoder(ref, token_target=2048).encode(rs)
+    path = tmp_path_factory.mktemp("v2") / "ds.sage2"
+    stats = write_v2(sf, path, align=512)
+    v1_store = SageStore()
+    v1_store.register("ds", sf)
+    return sf, str(path), stats, v1_store
+
+
+def lazy_store(path, **kw):
+    kw.setdefault("group_blocks", 4)
+    store = SageStore(**kw)
+    store.register("ds", path)
+    return store
+
+
+# ------------------------------------------------------------ layout round trip
+def test_v2_roundtrip_bit_identical(v2_setup):
+    sf, path, stats, _ = v2_setup
+    c = SageContainerV2.open(path)
+    assert c.meta.to_json() == sf.meta.to_json()
+    np.testing.assert_array_equal(c.directory, sf.directory)
+    assert c.to_sage_file().diff(sf) == []
+    assert stats["file_nbytes"] == os.path.getsize(path)
+    # extents are stride-aligned and disjoint
+    assert np.all(np.diff(c.extents[:, 0]) == stats["stride_nbytes"])
+    assert np.all(c.extents[:, 1] == stats["payload_nbytes"])
+
+
+def test_v2_roundtrip_variable_length(tmp_path):
+    """Variable-length (ONT) containers carry leng/lena; the extent layout
+    must round-trip them bit-identically too."""
+    ref = make_reference(20_000, seed=72)
+    rs = sample_read_set(ref, "ont", depth=1.5, seed=73, max_reads=12)
+    sf = SageEncoder(ref, token_target=4096).encode(rs)
+    assert sf.meta.fixed_read_len == 0 and sf.streams["leng"].size > 0
+    p = tmp_path / "var.sage2"
+    write_v2(sf, p)
+    assert SageContainerV2.open(p).to_sage_file().diff(sf) == []
+
+
+def test_header_only_open_and_sniffing(v2_setup, tmp_path):
+    sf, path, stats, _ = v2_setup
+    c = SageContainerV2.open(path)
+    # opening reads the header, not one extent byte
+    assert c.io_stats["header_bytes"] == stats["header_nbytes"]
+    assert c.io_stats["extent_bytes_read"] == 0
+    assert stats["header_nbytes"] < stats["data_start"] <= stats["file_nbytes"]
+    # version sniffing: v2 magic vs v1 zip, and SageFile.open routes both
+    assert container_version(path) == 2
+    v1p = tmp_path / "ds.sage.npz"
+    sf.save(v1p)
+    assert container_version(v1p) == 1
+    assert isinstance(SageFile.open(v1p), SageFile)
+    assert isinstance(SageFile.open(path), SageContainerV2)
+    assert isinstance(open_container(path), SageContainerV2)
+    junk = tmp_path / "junk.bin"
+    junk.write_bytes(b"not a container")
+    with pytest.raises(ValueError, match="not a SAGe container"):
+        container_version(junk)
+
+
+# --------------------------------------------------- lazy reads == v1 decode
+@pytest.mark.parametrize("fmt", ["2bit", "onehot", "kmer"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_lazy_ranged_read_bit_identical_to_v1(v2_setup, fmt, use_pallas):
+    """v2 lazy ranged decode == v1 whole-file decode, every format x both
+    decode paths, across range forms that span residency groups."""
+    _, path, _, v1_store = v2_setup
+    store = lazy_store(path)
+    ref_sess = v1_store.session(use_pallas=use_pallas)
+    sess = store.session(use_pallas=use_pallas)
+    nb = store.n_blocks("ds")
+    whole = ref_sess.read("ds", fmt=fmt, kmer_k=4)
+    keys = ["tokens", "n_tokens", "n_reads", "read_pos", "read_start", "read_len"]
+    if fmt != "2bit":
+        keys.append(fmt)
+    for rng in [None, (1, min(6, nb)), 0, [nb - 1, 0, min(5, nb - 1)]]:
+        out = sess.read("ds", rng, fmt=fmt, kmer_k=4)
+        ids = np.asarray(out["block_ids"])
+        for k in keys:
+            np.testing.assert_array_equal(
+                np.asarray(out[k]), np.asarray(whole[k])[ids], err_msg=f"{rng}:{k}"
+            )
+
+
+def test_gather_block_arrays_matches_host_prepare(v2_setup):
+    """The lazy gather IS the decoder layout: byte-identical to the v1 host
+    gather for an arbitrary (unsorted, duplicated) id set."""
+    from repro.core.decode_jax import prepare_block_arrays
+
+    sf, path, _, _ = v2_setup
+    c = SageContainerV2.open(path)
+    ids = np.array([3, 0, 7, 3, 1], dtype=np.int64) % sf.meta.n_blocks
+    lazy = c.gather_block_arrays(ids)
+    eager = prepare_block_arrays(sf, ids)
+    assert set(lazy) == set(eager) == set(STREAMS) | {"cons", "dir"}
+    for k in eager:
+        np.testing.assert_array_equal(lazy[k], eager[k], err_msg=k)
+    with pytest.raises(IndexError):
+        c.gather_block_arrays([sf.meta.n_blocks])
+
+
+def test_consensus_windows_lazy_matches_eager(v2_setup):
+    _, path, _, v1_store = v2_setup
+    store = lazy_store(path)
+    ids = [0, 5, 2]
+    w1, s1 = v1_store.consensus_windows("ds", ids)
+    w2, s2 = store.consensus_windows("ds", ids)
+    np.testing.assert_array_equal(w1, w2)
+    np.testing.assert_array_equal(s1, s2)
+    with pytest.raises(IndexError):
+        store.consensus_windows("ds", [store.n_blocks("ds") + 3])
+
+
+# -------------------------------------------------------- io_stats contracts
+def test_ranged_read_is_o_k_bytes(v2_setup):
+    """Reading k blocks costs O(k) extent bytes + header — never the
+    container. Repeat reads hit device residency (zero new disk bytes), and
+    device eviction refills from the host extent cache, still disk-free."""
+    _, path, stats, _ = v2_setup
+    store = lazy_store(path, group_blocks=4)
+    sess = store.session()
+    sess.read("ds", (0, 4))  # one residency group
+    io = store.io_stats
+    assert io["header_bytes"] == stats["header_nbytes"]
+    assert io["extent_reads"] == 1  # 4 adjacent extents -> ONE coalesced read
+    assert io["extent_bytes_read"] == 4 * stats["stride_nbytes"]
+    assert io["extent_bytes_read"] < stats["file_nbytes"]
+    sess.read("ds", (0, 4))  # device-resident: no I/O at all
+    assert store.io_stats["extent_bytes_read"] == io["extent_bytes_read"]
+    store.evict("ds")
+    sess.read("ds", (1, 3))  # host cache refill: upload, but no disk read
+    io2 = store.io_stats
+    assert io2["extent_bytes_read"] == io["extent_bytes_read"]
+    assert io2["cache_hits"] >= 1
+    store.reset_io_stats()
+    assert store.io_stats["extent_bytes_read"] == 0
+
+
+def test_cache_budget_evictions_execute(v2_setup):
+    """A budget smaller than the dataset forces extent-cache evictions while
+    reads stay correct, and resident bytes never exceed the budget."""
+    _, path, stats, v1_store = v2_setup
+    nb = v1_store.n_blocks("ds")
+    group_bytes = 2 * stats["stride_nbytes"] * 4  # generous per-group bound
+    store = lazy_store(path, group_blocks=2, cache_budget=group_bytes)
+    sess = store.session()
+    whole = v1_store.session().read("ds")
+    for lo in range(0, nb - 1, 2):
+        out = sess.read("ds", (lo, min(lo + 2, nb)))
+        np.testing.assert_array_equal(
+            np.asarray(out["tokens"]), np.asarray(whole["tokens"])[lo : min(lo + 2, nb)]
+        )
+    io = store.io_stats
+    assert io["cache_evictions"] > 0
+    assert io["cache_bytes"] <= group_bytes
+    assert io["cache_peak_bytes"] <= group_bytes
+
+
+def test_oversized_group_never_cached(v2_setup):
+    """An entry bigger than the budget is skipped, not cached over-budget:
+    the bound holds unconditionally and reads fall back to disk re-reads."""
+    _, path, stats, v1_store = v2_setup
+    store = lazy_store(path, group_blocks=4, cache_budget=64)  # < any group
+    sess = store.session()
+    whole = v1_store.session().read("ds")
+    out = sess.read("ds", (0, 4))
+    np.testing.assert_array_equal(
+        np.asarray(out["tokens"]), np.asarray(whole["tokens"])[0:4]
+    )
+    store.evict("ds")
+    before = store.io_stats["extent_bytes_read"]
+    sess.read("ds", (0, 4))  # nothing cached -> must re-read from disk
+    io = store.io_stats
+    assert io["cache_oversize_skips"] >= 2
+    assert io["cache_bytes"] == 0 and io["cache_peak_bytes"] == 0
+    assert io["extent_bytes_read"] == before + 4 * stats["stride_nbytes"]
+
+
+def test_cached_groups_own_their_bytes(v2_setup):
+    """The extent cache must hold COPIES, not views pinning the whole
+    stride-aligned read buffer — accounted bytes == retained bytes, so the
+    budget contract is about real memory."""
+    _, path, _, _ = v2_setup
+    store = lazy_store(path, group_blocks=4)
+    store.session().read("ds", (0, 4))
+    entries = list(store._extent_cache._entries.values())
+    assert entries
+    for arrays, nbytes in entries:
+        assert all(v.base is None for v in arrays.values())  # no pinned buffer
+        assert nbytes == sum(v.nbytes for v in arrays.values())
+
+
+def test_v1_path_survives_deletion_after_load(tmp_path):
+    """A v1 path is touched exactly once: after the whole-file load, reads
+    keep serving from the cache even if the file disappears (the sniff
+    verdict must be cached, not re-checked per access)."""
+    ref = make_reference(10_000, seed=78)
+    rs = sample_read_set(ref, "illumina", depth=1, seed=79)
+    sf = SageEncoder(ref, token_target=2048).encode(rs)
+    p = tmp_path / "v1.sage.npz"
+    sf.save(p)
+    store = SageStore()
+    store.register("ds", p)
+    first = np.asarray(store.session().read("ds", (0, 1))["tokens"])
+    os.unlink(p)
+    again = np.asarray(store.session().read("ds", (0, 1))["tokens"])
+    np.testing.assert_array_equal(first, again)
+    assert store.n_blocks("ds") == sf.meta.n_blocks
+
+
+def test_consensus_windows_empty_ids(v2_setup):
+    _, path, _, v1_store = v2_setup
+    for store in (lazy_store(path), v1_store):
+        wins, starts = store.consensus_windows("ds", [])
+        assert wins.shape == (0, store.meta("ds").caps.window)
+        assert starts.shape == (0,)
+
+
+def test_device_group_lru_bounded(v2_setup):
+    _, path, _, _ = v2_setup
+    store = lazy_store(path, group_blocks=2, max_prepared=2)
+    sess = store.session()
+    nb = store.n_blocks("ds")
+    for lo in range(0, min(nb, 8), 2):
+        sess.read("ds", (lo, lo + 1))
+    assert len(store.prepared_keys) <= 2
+    assert all(k[0] == "ds" and isinstance(k[1], int) for k in store.prepared_keys)
+    assert store.prepared_names == ()  # no whole-file residency was created
+    # a read spanning more groups than max_prepared still decodes correctly
+    whole = sess.read("ds", (0, min(nb, 7)))
+    assert np.asarray(whole["tokens"]).shape[0] == min(nb, 7)
+
+
+# ----------------------------------------------------- registration satellites
+def test_register_validates_eagerly(v2_setup, tmp_path):
+    _, path, _, _ = v2_setup
+    store = SageStore()
+    with pytest.raises(FileNotFoundError, match=r"dataset 'ghost'.*does not exist"):
+        store.register("ghost", tmp_path / "nope.sage2")
+    junk = tmp_path / "junk.sage2"
+    junk.write_bytes(b"\x00" * 64)
+    with pytest.raises(ValueError, match=r"dataset 'junk'"):
+        store.register("junk", junk)
+    assert store.names() == ()
+    # the lazy-v2 path: registration stays header-only until the first read
+    store.register("lazy", path)
+    assert store.io_stats["extent_bytes_read"] == 0
+    out = store.session().read("lazy", (0, 2))
+    assert np.asarray(out["tokens"]).shape[0] == 2
+
+
+def test_store_write_layouts(tmp_path):
+    ref = make_reference(12_000, seed=74)
+    rs = sample_read_set(ref, "illumina", depth=2, seed=75)
+    store = SageStore(group_blocks=4)
+    with pytest.raises(ValueError, match="needs path="):
+        store.write("a", rs, ref, token_target=2048, layout="v2")
+    with pytest.raises(ValueError, match="layout must be"):
+        store.write("a", rs, ref, token_target=2048, layout="v3")
+    sf = store.write("mem", rs, ref, token_target=2048)
+    p2 = tmp_path / "w.sage2"
+    store.write("disk2", rs, ref, token_target=2048, layout="v2", path=p2)
+    assert container_version(p2) == 2
+    assert store.last_write_stats["container"]["n_blocks"] == sf.meta.n_blocks
+    p1 = tmp_path / "w.sage.npz"
+    store.write("disk1", rs, ref, token_target=2048, layout="v1", path=p1)
+    assert container_version(p1) == 1
+    sess = store.session()
+    ref_toks = np.asarray(sess.read("mem")["tokens"])
+    np.testing.assert_array_equal(np.asarray(sess.read("disk2")["tokens"]), ref_toks)
+    np.testing.assert_array_equal(np.asarray(sess.read("disk1")["tokens"]), ref_toks)
+
+
+# ------------------------------------------------------------- migration CLI
+def test_migration_cli_roundtrip(v2_setup, tmp_path):
+    sf, _, _, _ = v2_setup
+    spec = importlib.util.spec_from_file_location(
+        "migrate_container",
+        Path(__file__).resolve().parents[1] / "tools" / "migrate_container.py",
+    )
+    cli = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cli)
+    v1 = tmp_path / "m.sage.npz"
+    sf.save(v1)
+    v2 = tmp_path / "m.sage2"
+    assert cli.main([str(v1), str(v2), "--verify", "--align", "1024"]) == 0
+    assert container_version(v2) == 2
+    back = tmp_path / "back.sage.npz"
+    assert cli.main([str(v2), str(back), "--to-v1", "--verify"]) == 0
+    assert SageFile.load(back).diff(sf) == []
+
+
+# ------------------------------------------------- out-of-core pipeline path
+def test_pipeline_cold_restart_out_of_core(v2_setup):
+    """The cursor restart resumes from a COLD lazy store: batches match the
+    in-memory pipeline exactly, the host cache never exceeds its budget, and
+    only the streamed blocks' bytes are read from disk."""
+    _, path, stats, v1_store = v2_setup
+    kw = dict(vocab_size=259, batch=2, seq_len=48, blocks_per_fetch=2)
+    ref_pipe = SageTokenPipeline("ds", store=v1_store, **kw)
+    want = [next(iter(ref_pipe.batches())) for _ in range(4)]
+
+    budget = 4 * stats["stride_nbytes"] * 4
+    store = lazy_store(path, group_blocks=2, cache_budget=budget, max_prepared=2)
+    pipe = SageTokenPipeline("ds", store=store, **kw)
+    assert store.io_stats["extent_bytes_read"] == 0  # construction is header-only
+    got = [next(iter(pipe.batches())) for _ in range(2)]
+
+    # cold restart: new store + pipeline, restore the cursor, stream resumes
+    store2 = lazy_store(path, group_blocks=2, cache_budget=budget, max_prepared=2)
+    pipe2 = SageTokenPipeline("ds", store=store2, **kw)
+    pipe2.restore(pipe.state())
+    got += [next(iter(pipe2.batches())) for _ in range(2)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w["tokens"], g["tokens"])
+        np.testing.assert_array_equal(w["labels"], g["labels"])
+    io = pipe2.io_stats
+    assert io["cache_peak_bytes"] <= budget
+    assert 0 < io["extent_bytes_read"] <= stats["file_nbytes"]
+    assert io["container_loads"] == 0  # never fell back to whole-file load
+
+
+# ------------------------------------------------------------- sharded mesh
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >1 device (forced host devices)")
+def test_lazy_read_under_sharded_mesh(v2_setup):
+    _, path, _, v1_store = v2_setup
+    store = lazy_store(path, shards=2, group_blocks=4)
+    nb = store.n_blocks("ds")
+    whole = v1_store.session().read("ds")
+    out = store.session().read("ds", (0, min(6, nb)))
+    for k in ("tokens", "n_reads", "read_start", "read_len", "read_pos"):
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.asarray(whole[k])[: min(6, nb)], err_msg=k
+        )
+
+
+# --------------------------------------------------- v1 loader fd-leak guard
+@pytest.mark.skipif(not sys.platform.startswith("linux"), reason="/proc fd counting")
+def test_sagefile_load_closes_descriptors(tmp_path):
+    ref = make_reference(8_000, seed=76)
+    rs = sample_read_set(ref, "illumina", depth=1, seed=77)
+    p = tmp_path / "leak.sage.npz"
+    SageEncoder(ref, token_target=2048).encode(rs).save(p)
+
+    def nfds() -> int:
+        return len(os.listdir("/proc/self/fd"))
+
+    SageFile.load(p)  # warm any lazy module state
+    before = nfds()
+    for _ in range(128):
+        SageFile.load(p)
+    assert nfds() <= before + 2  # no descriptor accumulation across loads

@@ -1,0 +1,73 @@
+"""Migrate SAGe containers between on-disk layouts.
+
+v1 (monolithic ``.npz``, whole-file decompress on every open) -> v2
+(block-extent container: header + one alignment-padded extent per block,
+lazy ranged reads — see DESIGN.md §7), and back for compatibility.
+
+  PYTHONPATH=src python tools/migrate_container.py reads.sage.npz reads.sage2
+  PYTHONPATH=src python tools/migrate_container.py reads.sage2 back.sage.npz --to-v1
+  PYTHONPATH=src python tools/migrate_container.py in out --verify  # bit-identity
+
+``--verify`` re-opens the migrated container, materializes it, and diffs
+every section (meta, directory, consensus, all 14 streams) against the
+source — exits non-zero on any mismatch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.format import SageFile  # noqa: E402
+from repro.core.layout import (  # noqa: E402
+    DEFAULT_ALIGN,
+    SageContainerV2,
+    container_version,
+    write_v2,
+)
+
+
+def _load_any(path: str) -> SageFile:
+    if container_version(path) == 2:
+        return SageContainerV2.open(path).to_sage_file()
+    return SageFile.load(path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("src", help="source container (v1 .npz or v2)")
+    ap.add_argument("dst", help="destination path")
+    ap.add_argument("--to-v1", action="store_true",
+                    help="write a v1 .npz instead of a v2 block-extent container")
+    ap.add_argument("--align", type=int, default=DEFAULT_ALIGN,
+                    help=f"v2 extent alignment in bytes (default {DEFAULT_ALIGN})")
+    ap.add_argument("--verify", action="store_true",
+                    help="re-open the output and check section-by-section bit-identity")
+    args = ap.parse_args(argv)
+
+    sf = _load_any(args.src)
+    if args.to_v1:
+        sf.save(args.dst)
+        print(f"v1 <- {args.src}: {sf.meta.n_blocks} blocks, "
+              f"{os.path.getsize(args.dst)/1e6:.2f} MB -> {args.dst}")
+    else:
+        stats = write_v2(sf, args.dst, align=args.align)
+        print(f"v2 <- {args.src}: {stats['n_blocks']} blocks x "
+              f"{stats['stride_nbytes']} B extents (payload {stats['payload_nbytes']} B), "
+              f"header {stats['header_nbytes']/1e3:.1f} KB, "
+              f"total {stats['file_nbytes']/1e6:.2f} MB -> {args.dst}")
+
+    if args.verify:
+        probs = _load_any(args.dst).diff(sf)
+        if probs:
+            print(f"VERIFY FAILED: sections differ: {probs}", file=sys.stderr)
+            return 1
+        print("verify: bit-identical round trip")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,10 @@
-"""Batched serving: SAGe-decoded reads as prompts -> prefill + decode loop.
+"""Multi-tenant serving: mixed SAGe traffic through the SageServer frontend.
 
-The paper's SAGe_Read/SAGe_ISP contract: decoded reads flow straight from
-the store into the analysis system — here a genomic LM continuation service
-(e.g. scoring or imputing read extensions) fed by ``prompts_from_store``.
+The paper's SAGe_Read/SAGe_ISP contract — decoded reads flow straight from
+the store into the analysis system — served to many concurrent tenants:
+ranged decodes, consensus windows, a streaming analysis feed, and genomic
+LM continuations all share one scheduler, one continuous-batch loop, and
+one device-resident store.
 
   PYTHONPATH=src python examples/serve_genomic_lm.py
 """
@@ -15,40 +17,58 @@ sys.path.insert(0, "src")
 import jax
 
 from repro.configs import get_arch
-from repro.core import SageStore
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.models import lm
-from repro.serving.engine import ServeConfig, ServingEngine, prompts_from_store
+from repro.serving import SageServer, ServeConfig, ServingEngine, SessionPool
 
 
 def main() -> None:
     cfg = get_arch("qwen2-1.5b").reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, ServeConfig(max_prompt=64, max_new=16))
+    eng = ServingEngine(cfg, params, ServeConfig(max_prompt=48, max_new=16))
 
     ref = make_reference(30_000, seed=31)
     rs = sample_read_set(ref, "illumina", depth=1, seed=32, max_reads=64)
-    store = SageStore()
-    store.write("serve", rs, ref, token_target=8192)  # SAGe_Write
-    session = store.session()
+    pool = SessionPool()
+    pool.write("serve", rs, ref, token_target=8192)  # SAGe_Write
+    srv = SageServer(pool, engine=eng)
+    nb = pool.store.n_blocks("serve")
 
-    # first reads' k-mer token prefixes as prompts (SAGe_Read -> serving)
-    prompts = prompts_from_store(
-        session, "serve", vocab=cfg.vocab, n_prompts=8, max_prompt=48, kmer_k=3,
-        block_range=(0, 1),
+    # a mixed-tenant burst: decodes + consensus + a stream + 4 generations
+    t0 = time.time()
+    reads = [srv.read("serve", (0, 2), fmt="kmer", kmer_k=4) for _ in range(4)]
+    cons = srv.consensus("serve")
+    isp = srv.stream("serve", blocks_per_fetch=1, max_fetches=min(3, nb))
+    gens = [
+        srv.generate(dataset="serve", block_range=(b % nb, b % nb + 1),
+                     max_prompt=48, kmer_k=3)
+        for b in range(4)
+    ]
+    srv.run_until_idle()
+    dt = time.time() - t0
+
+    n_new = sum(g.result()["tokens"].size for g in gens)
+    n_chunks = sum(1 for _ in isp.chunks(timeout=0))
+    st = srv.stats()
+    print(
+        f"served {st['scheduler']['finished']} requests in {dt:.2f}s "
+        f"(incl. compile): {len(reads)} reads, 1 consensus "
+        f"({cons.result()['windows'].shape[0]} windows), {n_chunks} stream "
+        f"chunks, {len(gens)} generations / {n_new} new tokens"
+    )
+    print(
+        f"fused {st['batcher']['fused_read_requests']} read requests into "
+        f"{st['batcher']['fused_reads']} decodes; prepared-LRU "
+        f"{st['pool']['cache']['total']}"
     )
 
+    # steady state: the same burst again — everything is resident + compiled
     t0 = time.time()
-    outs = eng.generate(prompts)
-    dt = time.time() - t0
-    total_new = sum(o.size for o in outs)
-    print(f"served {len(prompts)} SAGe-fed requests: {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s incl. compile)")
-    t0 = time.time()
-    outs = eng.generate(prompts)
-    print(f"steady-state: {total_new/(time.time()-t0):.0f} tok/s")
-    for i, o in enumerate(outs[:3]):
-        print(f"  req{i}: {o[:10].tolist()} ...")
+    for _ in range(4):
+        srv.read("serve", (0, 2), fmt="kmer", kmer_k=4)
+    srv.stream("serve", blocks_per_fetch=1, max_fetches=min(3, nb))
+    srv.run_until_idle()
+    print(f"steady-state burst: {time.time() - t0:.3f}s")
 
 
 if __name__ == "__main__":

@@ -149,6 +149,7 @@ class SageStore:
         self._io = new_io_stats()
         self._io["group_uploads"] = 0
         self._extent_cache = HostExtentCache(cache_budget)
+        self._cache_stats: dict[str, dict[str, int]] = {}
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- registration
@@ -259,6 +260,84 @@ class SageStore:
         whole-file entries, ``(name, group_index)`` for block groups."""
         return tuple(self._prepared)
 
+    # ------------------------------------------------------ cache observability
+    def _bump_cache(self, name: str, event: str) -> None:
+        """Count a prepared-LRU event (``hits``/``misses``/``evictions``)
+        against ``name``'s per-dataset counters (lock held by callers)."""
+        d = self._cache_stats.setdefault(
+            name, {"hits": 0, "misses": 0, "evictions": 0}
+        )
+        d[event] += 1
+
+    def cache_stats(self, name: Optional[str] = None) -> dict:
+        """Prepared-LRU counters: device-residency hits, misses (prepare +
+        upload events), and evictions, per dataset.
+
+        ``name`` selects one dataset's counters (zeros if it never hit the
+        LRU); ``None`` returns ``{"per_dataset": {...}, "total": {...}}``.
+        The storage-level mirror sits in ``io_stats``; these counters are
+        what cache-aware admission (serving/scheduler.py) keys on."""
+        with self._lock:
+            if name is not None:
+                return dict(
+                    self._cache_stats.get(
+                        name, {"hits": 0, "misses": 0, "evictions": 0}
+                    )
+                )
+            total = {"hits": 0, "misses": 0, "evictions": 0}
+            per = {}
+            for n, d in self._cache_stats.items():
+                per[n] = dict(d)
+                for k in total:
+                    total[k] += d[k]
+            return {"per_dataset": per, "total": total}
+
+    def reset_cache_stats(self) -> None:
+        """Zero the prepared-LRU counters (residency itself is untouched)."""
+        with self._lock:
+            self._cache_stats.clear()
+
+    def resident_fraction(self, name: str, ids=None) -> float:
+        """Fraction of the requested blocks already device-resident.
+
+        For lazy (v2) sources: the fraction of ``ids`` whose covering block
+        group currently sits in the device LRU (``ids=None`` = all blocks).
+        For eager sources residency is whole-file, so the answer is 1.0 or
+        0.0. This is the admission signal for cache-aware scheduling —
+        requests scoring high here decode without any disk or upload work.
+        Unregistered datasets score 0.0 (submission-time validation belongs
+        to the caller)."""
+        with self._lock:
+            if name not in self._sources:
+                return 0.0
+            try:
+                r = self._reader(name)
+            except (OSError, ValueError):
+                return 0.0
+            if r is None:
+                return 1.0 if (name, None) in self._prepared else 0.0
+            if ids is None:
+                gids = np.arange(
+                    -(-r.meta.n_blocks // self.group_blocks), dtype=np.int64
+                )
+            else:
+                gids = np.asarray(ids, dtype=np.int64) // self.group_blocks
+            if gids.size == 0:
+                return 1.0
+            resident = np.fromiter(
+                ((name, int(g)) in self._prepared for g in gids),
+                dtype=bool, count=gids.size,
+            )
+            return float(resident.mean())
+
+    def block_nbytes(self, name: str) -> int:
+        """Per-block device payload bytes in the prepared block-major layout
+        (streams + consensus window rows) — what one block of ``name`` costs
+        in device residency; the unit of memory-aware batch formation."""
+        from repro.core.decode_jax import block_row_widths
+
+        return 4 * sum(block_row_widths(self.meta(name)).values())
+
     @property
     def io_stats(self) -> dict:
         """Container I/O counters (disk bytes, ranged reads, host extent
@@ -347,7 +426,9 @@ class SageStore:
         with self._lock:
             if key in self._prepared:
                 self._prepared.move_to_end(key)
+                self._bump_cache(name, "hits")
                 return self._prepared[key]
+            self._bump_cache(name, "misses")
             db = prepare_device_blocks(self.file(name)).to_device(mesh=self.mesh)
             self._insert_prepared(key, db)
             return db
@@ -355,7 +436,8 @@ class SageStore:
     def _insert_prepared(self, key: tuple, db: DeviceBlocks) -> None:
         self._prepared[key] = db
         while len(self._prepared) > self.max_prepared:
-            self._prepared.popitem(last=False)
+            evicted, _ = self._prepared.popitem(last=False)
+            self._bump_cache(evicted[0], "evictions")
 
     def _group_stride(self) -> int:
         """Device rows per resident block group: ``group_blocks`` padded up
@@ -375,7 +457,9 @@ class SageStore:
         with self._lock:
             if key in self._prepared:
                 self._prepared.move_to_end(key)
+                self._bump_cache(name, "hits")
                 return self._prepared[key]
+            self._bump_cache(name, "misses")
             r = self._reader(name)
             if r is None:
                 # the dataset was re-registered onto an eager source between

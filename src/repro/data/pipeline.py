@@ -68,6 +68,7 @@ class SageTokenPipeline:
         *,
         name: str = "train",
         store: Optional[SageStore] = None,
+        session: Optional[SageReadSession] = None,
         use_pallas_decode: bool = False,
         blocks_per_fetch: int = 4,
         prefetch: int = 2,
@@ -77,6 +78,14 @@ class SageTokenPipeline:
         mesh=None,
         shards: Optional[int] = None,
     ) -> None:
+        if session is not None:
+            # fetch-path reuse: a shared session (e.g. from the serving
+            # frontend's SessionPool) carries its store, decode path, and
+            # jit caches — training streams then share the serving layer's
+            # device residency instead of opening a second store
+            if store is not None and session.store is not store:
+                raise ValueError("session= belongs to a different store than store=")
+            store = session.store
         if store is not None and (mesh is not None or shards is not None):
             raise ValueError(
                 "pass mesh/shards on the shared SageStore, not the pipeline — "
@@ -95,7 +104,10 @@ class SageTokenPipeline:
             if store is None:
                 raise ValueError("named dataset source requires a store")
             self.store, self.name = store, source
-        self.session: SageReadSession = self.store.session(use_pallas=use_pallas_decode)
+        self.session: SageReadSession = (
+            session if session is not None
+            else self.store.session(use_pallas=use_pallas_decode)
+        )
         # header-only metadata access: an out-of-core (v2) source must never
         # be materialized whole just to size the cursor math
         directory = self.store.directory(self.name)

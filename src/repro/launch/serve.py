@@ -1,7 +1,11 @@
-"""Serving launcher: SAGe-prepared prompts -> batched prefill/decode.
+"""Serving launcher: mixed SAGe traffic through the SageServer frontend.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 16 --max-new 32
+
+``--frontend`` (default) drives the full scheduler + continuous-batching
+stack; ``--no-frontend`` keeps the bare engine path (one padded batch of
+``prompts_from_store`` prompts) for A/B comparison.
 """
 
 from __future__ import annotations
@@ -12,10 +16,15 @@ import time
 import jax
 
 from repro.configs import get_arch
-from repro.core import SageStore
-from repro.genomics.synth import make_reference, sample_read_set
 from repro.models import lm
-from repro.serving.engine import ServeConfig, ServingEngine, prompts_from_store
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.serving import (
+    SageServer,
+    ServeConfig,
+    ServingEngine,
+    SessionPool,
+    prompts_from_store,
+)
 
 
 def main() -> None:
@@ -26,6 +35,9 @@ def main() -> None:
     ap.add_argument("--max-prompt", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--frontend", action=argparse.BooleanOptionalAction, default=True,
+                    help="route through the SageServer scheduler/batcher")
+    ap.add_argument("--policy", choices=("cache_aware", "fcfs"), default="cache_aware")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -38,21 +50,49 @@ def main() -> None:
     # prompts straight from SAGe-compressed storage (SAGe_Read -> KMER)
     ref = make_reference(40_000, seed=3)
     rs = sample_read_set(ref, "illumina", depth=1, seed=4, max_reads=args.requests * 2)
-    store = SageStore()
-    store.write("serve", rs, ref, token_target=8192)
-    prompts = prompts_from_store(
-        store.session(), "serve", vocab=cfg.vocab, n_prompts=args.requests,
-        max_prompt=args.max_prompt, kmer_k=3,
-    )
+    pool = SessionPool()
+    pool.write("serve", rs, ref, token_target=8192)
 
+    if not args.frontend:
+        prompts = prompts_from_store(
+            pool.session(), "serve", vocab=cfg.vocab, n_prompts=args.requests,
+            max_prompt=args.max_prompt, kmer_k=3,
+        )
+        t0 = time.time()
+        outs = eng.generate(prompts)
+        dt = time.time() - t0
+        n_tok = sum(o.size for o in outs)
+        print(f"served {len(prompts)} requests / {n_tok} tokens in {dt:.2f}s (incl. compile)")
+        t0 = time.time()
+        eng.generate(prompts)
+        print(f"steady-state: {n_tok/(time.time()-t0):.0f} tok/s")
+        return
+
+    srv = SageServer(pool, engine=eng, policy=args.policy)
+    nb = pool.store.n_blocks("serve")
     t0 = time.time()
-    outs = eng.generate(prompts)
+    gens = [
+        srv.generate(dataset="serve", block_range=(i % nb, i % nb + 1),
+                     max_prompt=args.max_prompt, kmer_k=3)
+        for i in range(args.requests)
+    ]
+    reads = [srv.read("serve", (i % nb, i % nb + 1)) for i in range(args.requests)]
+    srv.run_until_idle()
     dt = time.time() - t0
-    n_tok = sum(o.size for o in outs)
-    print(f"served {len(prompts)} requests / {n_tok} tokens in {dt:.2f}s (incl. compile)")
+    n_tok = sum(g.result()["tokens"].size for g in gens)
+    assert all(r.result() is not None for r in reads)
+    st = srv.stats()
+    print(
+        f"served {st['scheduler']['finished']} mixed requests "
+        f"({len(gens)} generate / {n_tok} tokens, {len(reads)} reads) in "
+        f"{dt:.2f}s incl. compile; {st['batcher']['fused_reads']} fused "
+        f"decodes, {st['batcher']['generate_batches']} LM batches"
+    )
     t0 = time.time()
-    eng.generate(prompts)
-    print(f"steady-state: {n_tok/(time.time()-t0):.0f} tok/s")
+    for i in range(args.requests):
+        srv.read("serve", (i % nb, i % nb + 1))
+    srv.run_until_idle()
+    print(f"steady-state reads: {args.requests/(time.time()-t0):.0f} req/s")
 
 
 if __name__ == "__main__":

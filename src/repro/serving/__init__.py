@@ -1,1 +1,15 @@
-from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.engine import (
+    SageServer,
+    ServeConfig,
+    ServingEngine,
+    prompts_from_store,
+)
+from repro.serving.scheduler import (
+    QueueFullError,
+    Request,
+    RequestState,
+    ResponseHandle,
+    Scheduler,
+)
+from repro.serving.batching import ContinuousBatcher
+from repro.serving.session_pool import SessionPool

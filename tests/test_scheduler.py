@@ -1,0 +1,308 @@
+"""Scheduler + continuous-batcher unit tests: the serving lifecycle.
+
+Covers the state machine (waiting -> running -> finished/aborted, aborts
+from both live states), FCFS vs priority ordering, cache-aware admission
+preferring device-resident block groups, eviction fairness under a tiny
+device LRU, ingestion backpressure when the waiting queue is full, and
+stream backpressure pausing a lagging consumer's work.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SageStore
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.serving import (
+    ContinuousBatcher,
+    QueueFullError,
+    Request,
+    RequestState,
+    SageServer,
+    Scheduler,
+    SessionPool,
+)
+
+
+@pytest.fixture(scope="module")
+def two_datasets():
+    """One encoded read set registered under two names (independent
+    residency keys, shared bytes — cheap multi-dataset traffic)."""
+    ref = make_reference(20_000, seed=50)
+    rs = sample_read_set(ref, "illumina", depth=2, seed=51)
+    store = SageStore(max_prepared=4)
+    sf = store.write("a", rs, ref, token_target=4096)
+    store.register("b", sf)
+    return store, sf
+
+
+def _server(store, **kw):
+    kw.setdefault("policy", "fcfs")
+    return SageServer(SessionPool(store=store), **kw)
+
+
+# --------------------------------------------------------------- lifecycle
+def test_lifecycle_waiting_running_finished(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    h = srv.read("a", (0, 2))
+    assert h.state is RequestState.WAITING
+    srv.scheduler.admit(4)
+    assert h.state is RequestState.RUNNING
+    srv.run_until_idle()
+    assert h.state is RequestState.FINISHED
+    assert h.result() is not None
+    assert h.latency is not None and h.latency >= 0
+
+
+def test_abort_from_waiting(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    h = srv.read("a", (0, 1))
+    assert h.abort() is True
+    assert h.state is RequestState.ABORTED
+    assert h.abort() is False  # idempotent once terminal
+    assert list(h.chunks(timeout=0)) == []  # never ran, channel just closes
+    srv.run_until_idle()
+    assert srv.scheduler.stats["aborted"] == 1
+    assert srv.scheduler.stats["finished"] == 0
+
+
+def test_abort_from_running_stops_stream(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    nb = store.n_blocks("a")
+    h = srv.stream("a", blocks_per_fetch=1, max_fetches=nb)
+    assert srv.step() >= 1  # one chunk delivered, stream still running
+    assert h.state is RequestState.RUNNING
+    assert h.abort() is True
+    assert h.state is RequestState.ABORTED
+    delivered_before = srv.scheduler.stats["chunks"]
+    srv.run_until_idle()
+    assert srv.scheduler.stats["chunks"] == delivered_before  # nothing more
+    chunks = list(h.chunks(timeout=0))
+    assert len(chunks) == 1  # the pre-abort chunk still drains
+
+
+def test_finish_and_abort_counts(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    hs = [srv.read("a", (0, 1)) for _ in range(3)]
+    hs[1].abort()
+    srv.run_until_idle()
+    assert [h.state for h in hs] == [
+        RequestState.FINISHED, RequestState.ABORTED, RequestState.FINISHED
+    ]
+    assert srv.scheduler.stats == {
+        **srv.scheduler.stats, "finished": 2, "aborted": 1, "submitted": 3
+    }
+
+
+# ---------------------------------------------------------------- ordering
+def test_fcfs_orders_by_priority_then_arrival():
+    sched = Scheduler(policy="fcfs", max_waiting=8)
+    hs = [
+        sched.submit(Request(kind="read", dataset="d", priority=p))
+        for p in (1, 0, 1, 0)
+    ]
+    order = [e.rid for e in sched.admit(4)]
+    assert order == [hs[1].id, hs[3].id, hs[0].id, hs[2].id]
+
+
+def test_cache_aware_prefers_resident_then_arrival():
+    resident = {"hot": 1.0, "cold": 0.0}
+    sched = Scheduler(
+        policy="cache_aware", max_waiting=8,
+        residency=lambda r: resident[r.dataset],
+    )
+    h_cold = sched.submit(Request(kind="read", dataset="cold"))
+    h_hot = sched.submit(Request(kind="read", dataset="hot"))
+    h_pri = sched.submit(Request(kind="read", dataset="cold", priority=-1))
+    order = [e.rid for e in sched.admit(3)]
+    # priority beats residency; residency beats arrival
+    assert order == [h_pri.id, h_hot.id, h_cold.id]
+
+
+def test_cache_aware_rescoring_between_rounds():
+    """A request whose groups became resident after submission jumps ahead
+    at the NEXT admission round (scoring is per-round, not per-submit)."""
+    resident = {"x": 0.0, "y": 0.0}
+    sched = Scheduler(policy="cache_aware", residency=lambda r: resident[r.dataset])
+    sched.submit(Request(kind="read", dataset="x"))
+    h_y = sched.submit(Request(kind="read", dataset="y"))
+    resident["y"] = 1.0
+    assert sched.admit(1)[0].rid == h_y.id
+
+
+# ---------------------------------------------------- cache-aware admission
+def test_cache_aware_admission_prefers_resident_blocks(two_datasets):
+    """End-to-end: with 'a' device-resident, later-submitted 'a' requests
+    admit before earlier cold 'b' requests under cache_aware (and do NOT
+    under fcfs)."""
+    store, _ = two_datasets
+    store.evict()
+    store.session().read("a", (0, 1))  # make 'a' resident
+    for policy, expect_first in (("cache_aware", "a"), ("fcfs", "b")):
+        srv = _server(store, policy=policy)
+        srv.read("b", (0, 1))
+        h_a = srv.read("a", (0, 1))
+        first = srv.scheduler.admit(1)[0]
+        assert first.request.dataset == expect_first, policy
+        if policy == "cache_aware":
+            assert first.rid == h_a.id
+        srv.scheduler.abort(first.rid)
+        for e in list(srv.scheduler.waiting):
+            srv.scheduler.abort(e.rid)
+
+
+def test_eviction_fairness_under_tiny_device_budget():
+    """max_prepared=1 + interleaved two-dataset traffic: every request
+    still finishes, and cache-aware admission clusters same-dataset
+    requests so the tiny LRU thrashes less than strict FCFS."""
+    ref = make_reference(16_000, seed=60)
+    rs = sample_read_set(ref, "illumina", depth=2, seed=61)
+    misses = {}
+    for policy in ("fcfs", "cache_aware"):
+        store = SageStore(max_prepared=1)
+        sf = store.write("a", rs, ref, token_target=4096)
+        store.register("b", sf)
+        store.session().read("a", (0, 1))  # warm: 'a' resident
+        store.reset_cache_stats()
+        srv = _server(store, policy=policy, max_batch_requests=2)
+        hs = []
+        for i in range(8):  # interleave a,b,a,b,...
+            hs.append(srv.read("a" if i % 2 == 0 else "b", (0, 2)))
+        srv.run_until_idle()
+        assert all(h.state is RequestState.FINISHED for h in hs), policy
+        misses[policy] = store.cache_stats()["total"]["misses"]
+    # fcfs admits (a,b) every round -> both prepared per round; cache-aware
+    # drains the resident dataset first -> one switch, two misses total
+    assert misses["cache_aware"] < misses["fcfs"], misses
+
+
+# ------------------------------------------------------------- backpressure
+def test_waiting_queue_backpressure(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store, max_waiting=2)
+    srv.read("a", (0, 1))
+    srv.read("a", (0, 1))
+    with pytest.raises(QueueFullError):
+        srv.read("a", (0, 1), timeout=0)
+    assert srv.scheduler.stats["rejected"] == 1
+    srv.step()  # drains the queue (admission frees waiting slots)
+    h = srv.read("a", (0, 1), timeout=0)  # now accepted
+    srv.run_until_idle()
+    assert h.state is RequestState.FINISHED
+
+
+def test_stream_buffer_backpressure_pauses_without_dropping(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    nb = store.n_blocks("a")
+    assert nb >= 3
+    h = srv.stream("a", blocks_per_fetch=1, max_fetches=3, stream_buffer=1)
+    srv.step()
+    assert h.queue_depth == 1
+    before = srv.batcher.stats["skipped_backpressure"]
+    srv.step()  # consumer lags: no new chunk, stream stays running
+    assert h.queue_depth == 1 and h.state is RequestState.RUNNING
+    assert srv.batcher.stats["skipped_backpressure"] == before + 1
+    it = h.chunks(timeout=1)
+    c0 = next(it)  # drain one -> stream resumes
+    srv.step()
+    c1 = next(it)
+    srv.step()  # final fetch delivered; stream finishes
+    chunks = [c0, c1] + list(it)
+    assert [c["fetch"] for c in chunks] == [0, 1, 2]  # nothing lost
+    assert h.state is RequestState.FINISHED
+
+
+def test_run_until_idle_raises_on_stalled_backpressure(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    srv.stream("a", blocks_per_fetch=1, stream_buffer=1)
+    with pytest.raises(RuntimeError, match="backpressure"):
+        srv.run_until_idle()
+
+
+# -------------------------------------------------- batch formation limits
+def test_memory_budget_defers_but_never_starves(two_datasets):
+    store, _ = two_datasets
+    bnb = store.block_nbytes("a")
+    srv = _server(store, max_batch_bytes=2 * bnb)  # ~2 blocks per round
+    hs = [srv.read("a", (i, i + 1)) for i in range(4)]
+    srv.run_until_idle()
+    assert all(h.state is RequestState.FINISHED for h in hs)
+    assert srv.batcher.stats["deferred"] > 0
+
+
+def test_union_block_cap_splits_fused_reads(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store, max_union_blocks=1)
+    hs = [srv.read("a", (i, i + 1)) for i in range(3)]
+    srv.run_until_idle()
+    assert all(h.state is RequestState.FINISHED for h in hs)
+    assert srv.batcher.stats["fused_reads"] >= 3
+
+
+def test_oversized_request_runs_alone(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store, max_batch_bytes=1)  # nothing "fits"
+    h = srv.read("a", (0, 3))
+    srv.run_until_idle()
+    assert h.state is RequestState.FINISHED
+    assert h.result()["data"]["tokens"].shape[0] == 3
+
+
+# ---------------------------------------------------------------- validation
+def test_request_validation():
+    with pytest.raises(ValueError, match="unknown request kind"):
+        Request(kind="nope")
+    with pytest.raises(ValueError, match="needs dataset"):
+        Request(kind="read")
+    with pytest.raises(ValueError, match="blocks_per_fetch"):
+        Request(kind="isp", dataset="d", blocks_per_fetch=0)
+    with pytest.raises(ValueError, match="stream_buffer"):
+        Request(kind="read", dataset="d", stream_buffer=0)
+    with pytest.raises(ValueError, match="unknown policy"):
+        Scheduler(policy="lifo")
+    with pytest.raises(ValueError, match="max_waiting"):
+        Scheduler(max_waiting=0)
+
+
+def test_submit_validation(two_datasets):
+    store, _ = two_datasets
+    srv = _server(store)
+    with pytest.raises(KeyError, match="not registered"):
+        srv.read("missing", (0, 1))
+    with pytest.raises(ValueError, match="kmer_k"):
+        srv.read("a", (0, 1), fmt="kmer")
+    with pytest.raises(ValueError, match="no ServingEngine"):
+        srv.generate(prompt=np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="not both"):
+        SageServer(SessionPool(store=store), store=store)
+    with pytest.raises(ValueError, match="not both"):
+        SessionPool(store=store, max_prepared=2)
+
+
+def test_bad_range_fails_only_its_own_request(two_datasets):
+    """A request whose range is out of bounds aborts with ITS error; the
+    rest of the batch is unaffected."""
+    store, _ = two_datasets
+    srv = _server(store)
+    nb = store.n_blocks("a")
+    good = srv.read("a", (0, 1))
+    bad = srv.read("a", (nb, nb + 2))
+    srv.run_until_idle()
+    assert good.state is RequestState.FINISHED
+    assert bad.state is RequestState.ABORTED
+    with pytest.raises(ValueError, match="out of bounds"):
+        list(bad.chunks(timeout=0))
+
+
+def test_batcher_knob_validation(two_datasets):
+    store, _ = two_datasets
+    pool = SessionPool(store=store)
+    with pytest.raises(ValueError, match="max_batch_requests"):
+        ContinuousBatcher(pool, Scheduler(), max_batch_requests=0)
+    with pytest.raises(ValueError, match="max_union_blocks"):
+        ContinuousBatcher(pool, Scheduler(), max_union_blocks=0)

@@ -1,0 +1,314 @@
+"""SageServer frontend: output parity, streaming, multi-tenant residency,
+engine fixes, and ``prompts_from_store`` edge cases.
+
+The acceptance contract: everything the server returns for the read path
+is bit-identical to a direct ``session.read`` of the same blocks; streams
+deliver every chunk in order; the session pool keeps ONE device residency
+across tenants; engines no longer share a ``ServeConfig``; and the prompt
+feed handles over-asking, zero-k-mer ranges, and truncation consistently
+with the engine's slot layout.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import SageStore
+from repro.data.pipeline import SageTokenPipeline
+from repro.genomics.synth import ReadSet, make_reference, sample_read_set
+from repro.serving import (
+    RequestState,
+    SageServer,
+    ServeConfig,
+    ServingEngine,
+    SessionPool,
+    prompts_from_store,
+)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    ref = make_reference(24_000, seed=70)
+    rs = sample_read_set(ref, "illumina", depth=3, seed=71)
+    p = SessionPool(max_prepared=4)
+    p.write("ds", rs, ref, token_target=4096)
+    return p
+
+
+@pytest.fixture(scope="module")
+def v2_pool(tmp_path_factory):
+    """A lazy out-of-core dataset: block-granular residency under serving."""
+    ref = make_reference(24_000, seed=72)
+    rs = sample_read_set(ref, "illumina", depth=3, seed=73)
+    path = tmp_path_factory.mktemp("serve_v2") / "ds.sage2"
+    p = SessionPool(max_prepared=4, group_blocks=2)
+    p.write("ds", rs, ref, token_target=4096, layout="v2", path=path)
+    return p
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    from repro.configs import get_arch
+    from repro.models import lm
+
+    cfg = get_arch("qwen2-1.5b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(cfg, params, ServeConfig(max_prompt=16, max_new=8))
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("fmt,k", [("2bit", None), ("kmer", 4), ("onehot", None)])
+def test_server_read_parity_with_direct_session(pool, fmt, k):
+    srv = SageServer(pool)
+    h = srv.read("ds", (0, 3), fmt=fmt, kmer_k=k)
+    srv.run_until_idle()
+    direct = pool.session().read("ds", (0, 3), fmt, kmer_k=k)
+    got = h.result()["data"]
+    for key, v in direct.items():
+        if key == "block_ids":
+            continue
+        np.testing.assert_array_equal(np.asarray(got[key]), np.asarray(v), err_msg=key)
+
+
+def test_fused_batch_parity_each_request_gets_its_own_slice(pool):
+    """Overlapping concurrent requests fuse into one decode; every tenant
+    still receives exactly its own blocks."""
+    srv = SageServer(pool)
+    ranges = [(0, 2), (1, 4), (2, 3), (0, 4)]
+    hs = [srv.read("ds", r) for r in ranges]
+    srv.run_until_idle()
+    assert srv.batcher.stats["fused_reads"] == 1  # one decode for all four
+    sess = pool.session()
+    for h, r in zip(hs, ranges):
+        direct = sess.read("ds", r)
+        got = h.result()
+        np.testing.assert_array_equal(got["block_ids"], np.arange(*r))
+        np.testing.assert_array_equal(
+            np.asarray(got["data"]["tokens"]), np.asarray(direct["tokens"])
+        )
+
+
+def test_isp_stream_chunks_match_direct_reads(pool):
+    srv = SageServer(pool)
+    h = srv.stream("ds", (0, 4), blocks_per_fetch=2, fmt="kmer", kmer_k=4)
+    srv.run_until_idle()
+    chunks = list(h.chunks(timeout=0))
+    assert [c["fetch"] for c in chunks] == [0, 1]
+    sess = pool.session()
+    for c in chunks:
+        direct = sess.read("ds", c["block_ids"], "kmer", kmer_k=4)
+        np.testing.assert_array_equal(
+            np.asarray(c["data"]["kmer"]), np.asarray(direct["kmer"])
+        )
+
+
+def test_consensus_parity(pool):
+    srv = SageServer(pool)
+    h = srv.consensus("ds", (1, 4))
+    srv.run_until_idle()
+    wins, starts = pool.store.consensus_windows("ds", np.arange(1, 4))
+    out = h.result()
+    np.testing.assert_array_equal(out["windows"], wins)
+    np.testing.assert_array_equal(out["starts"], starts)
+
+
+def test_v2_store_served_block_granular(v2_pool):
+    """Out-of-core datasets serve through the same frontend: residency is
+    block-group granular and reads touch only covering groups."""
+    store = v2_pool.store
+    store.evict()
+    store.reset_io_stats()
+    srv = SageServer(v2_pool)
+    h = srv.read("ds", (0, 2))
+    srv.run_until_idle()
+    direct = v2_pool.session().read("ds", (0, 2))
+    np.testing.assert_array_equal(
+        np.asarray(h.result()["data"]["tokens"]), np.asarray(direct["tokens"])
+    )
+    assert 0.0 < store.resident_fraction("ds") < 1.0  # only group 0 resident
+    assert store.resident_fraction("ds", [0, 1]) == 1.0
+
+
+def test_multi_tenant_requests_share_one_residency(pool):
+    """N concurrent tenants on one dataset = ONE prepare+upload."""
+    store = pool.store
+    store.evict()
+    store.reset_cache_stats()
+    srv = SageServer(pool)
+    hs = [srv.read("ds", (0, 2)) for _ in range(6)]
+    srv.run_until_idle()
+    assert all(h.state is RequestState.FINISHED for h in hs)
+    cs = store.cache_stats("ds")
+    assert cs["misses"] == 1  # single preparation, everything else hits
+
+
+def test_background_server_thread(pool):
+    with SageServer(pool) as srv:
+        done = []
+
+        def client(i):
+            h = srv.read("ds", (i % 3, i % 3 + 2))
+            out = h.result(timeout=60)
+            done.append((i, out is not None, h.state))
+
+        ts = [threading.Thread(target=client, args=(i,)) for i in range(5)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=120)
+    assert len(done) == 5
+    assert all(ok and st is RequestState.FINISHED for _, ok, st in done)
+
+
+# ---------------------------------------------------------------- generate
+def test_generate_through_server_matches_engine(pool, tiny_engine):
+    srv = SageServer(pool, engine=tiny_engine)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    h1 = srv.generate(prompt=prompt)
+    h2 = srv.generate(dataset="ds", block_range=(0, 1), max_prompt=12, kmer_k=3)
+    srv.run_until_idle()
+    assert srv.batcher.stats["generate_batches"] == 1  # one padded batch
+    # greedy decoding is row-independent: the fused batch row must equal a
+    # solo engine call on the same prompt
+    solo = tiny_engine.generate([prompt])[0]
+    np.testing.assert_array_equal(h1.result()["tokens"], solo)
+    expect_p = prompts_from_store(
+        pool.session(), "ds", vocab=tiny_engine.cfg.vocab, n_prompts=1,
+        max_prompt=12, kmer_k=3, block_range=(0, 1),
+    )[0]
+    np.testing.assert_array_equal(
+        h2.result()["tokens"], tiny_engine.generate([expect_p])[0]
+    )
+
+
+def test_generate_empty_prompt_range_aborts_cleanly(pool, tiny_engine):
+    srv = SageServer(pool, engine=tiny_engine)
+    # a range yielding no prompts: n_prompts filter on an empty block set is
+    # impossible via the API, so force it with an absurd kmer_k
+    h = srv.generate(dataset="ds", block_range=(0, 1), kmer_k=15, max_prompt=4)
+    srv.run_until_idle()
+    if h.state is RequestState.ABORTED:  # reads shorter than 15-mers only
+        with pytest.raises(ValueError, match="no prompts"):
+            list(h.chunks(timeout=0))
+    else:  # dataset happened to have >=15-base reads: fine, it generated
+        assert h.result() is not None
+
+
+# ------------------------------------------------------------ engine fixes
+def test_serve_config_not_shared_between_engines(tiny_engine):
+    e1 = ServingEngine(tiny_engine.cfg, tiny_engine.params)
+    e2 = ServingEngine(tiny_engine.cfg, tiny_engine.params)
+    assert e1.sc is not e2.sc  # the shared-mutable-default bug
+    e1.sc.temperature = 0.7
+    assert e2.sc.temperature == 0.0
+
+
+def test_temperature_guard_consistent_between_prefill_and_step(tiny_engine):
+    """Both sampling sites share one floor: a denormal temperature behaves
+    exactly like the 1e-6 floor instead of overflowing the decode loop."""
+    prompts = [np.arange(1, 7, dtype=np.int32)]
+    outs = {}
+    for t in (1e-300, 1e-6):
+        eng = ServingEngine(
+            tiny_engine.cfg, tiny_engine.params,
+            ServeConfig(max_prompt=16, max_new=6, temperature=t, seed=9),
+        )
+        outs[t] = eng.generate(prompts)[0]
+        assert outs[t].min() >= 0 and outs[t].max() < tiny_engine.cfg.vocab
+    np.testing.assert_array_equal(outs[1e-300], outs[1e-6])
+
+
+def test_generate_empty_batch(tiny_engine):
+    assert tiny_engine.generate([]) == []
+
+
+# ----------------------------------------------- prompts_from_store edges
+def test_prompts_n_prompts_exceeding_available(pool):
+    sess = pool.session()
+    out = sess.read("ds", (0, 1), fmt="kmer", kmer_k=4)
+    lens = np.asarray(out["read_len"])[0]
+    n_real = int(np.asarray(out["n_reads"])[0])
+    eligible = int((lens[:n_real] // 4 > 0).sum())
+    ps = prompts_from_store(
+        sess, "ds", vocab=259, n_prompts=10_000, kmer_k=4, block_range=(0, 1)
+    )
+    assert len(ps) == eligible  # over-asking returns what exists, no pad
+    assert all(p.size > 0 for p in ps)
+
+
+def test_prompts_all_zero_kmer_blocks_return_empty():
+    """A range where every read is shorter than one k-mer yields []."""
+    ref = make_reference(8_000, seed=74)
+    rng = np.random.default_rng(0)
+    reads = [ref[p : p + 10].copy() for p in rng.integers(0, 7000, size=12)]
+    quals = [np.full(10, 70, np.uint8) for _ in reads]
+    rs = ReadSet(reads=reads, quals=quals, kind="short", profile="tiny")
+    store = SageStore()
+    store.write("short", rs, ref, token_target=2048)
+    assert prompts_from_store(
+        store.session(), "short", vocab=4**8, kmer_k=15, n_prompts=4
+    ) == []
+
+
+def test_prompts_max_prompt_truncation_prefix_parity(pool):
+    """max_prompt truncation keeps the k-mer PREFIX — the same prefix the
+    engine's left-pad slot layout keeps (``p[:P]``), so pre-truncating at
+    the feed and truncating at the slot agree."""
+    sess = pool.session()
+    kw = dict(vocab=259, n_prompts=6, kmer_k=4, block_range=(0, 2))
+    long = prompts_from_store(sess, "ds", max_prompt=32, **kw)
+    short = prompts_from_store(sess, "ds", max_prompt=8, **kw)
+    assert len(long) == len(short)
+    for lo, sh in zip(long, short):
+        assert sh.size == min(8, lo.size)
+        np.testing.assert_array_equal(sh, lo[: sh.size])
+
+
+def test_prompt_slot_truncation_matches_pretruncated(pool, tiny_engine):
+    """Feeding a prompt longer than the engine slot equals feeding its
+    pre-truncated prefix (the left-pad layout keeps token P-1 hot)."""
+    P = tiny_engine.sc.max_prompt
+    long_prompt = np.arange(1, P + 9, dtype=np.int32)  # P + 8 tokens
+    a = tiny_engine.generate([long_prompt])[0]
+    b = tiny_engine.generate([long_prompt[:P]])[0]
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------- session pool glue
+def test_session_pool_shares_sessions_and_store(pool):
+    s1 = pool.session()
+    s2 = pool.session()
+    s3 = pool.session(use_pallas=True)
+    assert s1 is s2 and s1 is not s3
+    assert pool.n_sessions == 2
+    assert s1.store is pool.store
+
+
+def test_pipeline_reuses_pooled_session(pool):
+    pipe = pool.pipeline("ds", vocab_size=259, batch=2, seq_len=16)
+    assert pipe.session is pool.session()
+    assert pipe.store is pool.store
+    batch = next(pipe.batches())
+    assert batch["tokens"].shape == (2, 16)
+
+
+def test_pipeline_rejects_foreign_session(pool):
+    other = SageStore()
+    with pytest.raises(ValueError, match="different store"):
+        SageTokenPipeline(
+            "ds", 259, 2, 16, store=other, session=pool.session()
+        )
+
+
+def test_cache_stats_reset(pool):
+    pool.session().read("ds", (0, 1))
+    assert pool.store.cache_stats()["total"]["misses"] + \
+        pool.store.cache_stats()["total"]["hits"] > 0
+    pool.store.reset_cache_stats()
+    assert pool.store.cache_stats() == {
+        "per_dataset": {}, "total": {"hits": 0, "misses": 0, "evictions": 0}
+    }
+    assert pool.store.cache_stats("ds") == {"hits": 0, "misses": 0, "evictions": 0}

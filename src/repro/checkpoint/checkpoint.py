@@ -29,6 +29,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core.errors import IntegrityError
+
 
 def _flatten(tree) -> list[tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -130,7 +132,12 @@ class CheckpointManager:
             if verify:
                 got = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
                 if got != rec["sha256_16"]:
-                    raise IOError(f"checksum mismatch for {name} in step_{step}")
+                    # IntegrityError subclasses OSError, so pre-existing
+                    # `except IOError` callers keep working
+                    raise IntegrityError(
+                        f"checksum mismatch for {name} in step_{step}",
+                        path=str(d / rec["file"]), section=name,
+                    )
             assert list(arr.shape) == list(leaf.shape), (name, arr.shape, leaf.shape)
             out_leaves.append(arr)
         tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), out_leaves)

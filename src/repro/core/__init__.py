@@ -29,6 +29,15 @@ from repro.core.decode_jax import (
     trace_counts,
 )
 from repro.core.encoder import SageEncoder
+from repro.core.errors import (
+    DEFAULT_RETRY,
+    IntegrityError,
+    RetryPolicy,
+    SageIOError,
+    StaleDatasetError,
+    TornWriteError,
+    TransientIOError,
+)
 from repro.core.format import BlockCaps, SageFile, SageMeta
 from repro.core.layout import (
     HostExtentCache,

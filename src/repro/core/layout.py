@@ -34,12 +34,29 @@ extents into one ranged ``seek``/``read`` (the streaming-access pattern of
 §5.4) and counts every byte in ``io_stats`` so callers can assert read
 amplification. ``HostExtentCache`` is the byte-budget host cache the
 :class:`repro.core.store.SageStore` puts between disk and device residency.
+
+**Integrity (PR 7).** New containers carry end-to-end checksums: a CRC32C
+per extent payload (its own header section), CRCs of the directory, extent
+table, and consensus section in the header json, and a self-checksummed
+commit footer at end-of-file binding a CRC of the whole header region —
+so a flipped bit anywhere is *detected* (``IntegrityError``) instead of
+silently decoded, and a torn write can never present as a valid container
+(``TornWriteError`` on a missing/invalid footer). ``write_v2`` is atomic:
+tmp file + fsync + rename, so a crashed writer leaves either the old
+container or nothing. Ranged reads retry transient failures (EIO, short
+reads) under a bounded exponential-backoff :class:`RetryPolicy`; a
+checksum mismatch earns exactly one re-read before raising. Containers
+written before this revision have no checksum section — they still open
+and serve bit-identically, with verification skipped
+(``container_version(path, detail=True)`` reports the capability).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import time
 from collections import OrderedDict
 from pathlib import Path
 from typing import Optional
@@ -51,9 +68,19 @@ from repro.core.decode_jax import (
     localize_directory,
     prepare_block_arrays,
 )
+from repro.core.errors import (
+    DEFAULT_RETRY,
+    IntegrityError,
+    RetryPolicy,
+    SageIOError,
+    TornWriteError,
+    TransientIOError,
+)
 from repro.core.format import D, NDIR, STREAMS, SageFile, SageMeta
 
 MAGIC = b"SAGE2EXT"
+FOOTER_MAGIC = b"SAGE2FIN"
+FOOTER_NBYTES = 24  # magic(8) + body_nbytes u64 + header_crc u32 + self_crc u32
 DEFAULT_ALIGN = 4096  # NAND-page-sized extent alignment
 _FIXED = len(MAGIC) + 8  # magic + uint64 json length
 
@@ -63,6 +90,55 @@ EXTENT_KEYS = STREAMS + ("cons",)
 
 def align_up(n: int, a: int) -> int:
     return -(-n // a) * a
+
+
+def _open_read(path):
+    """Every read-side file open of this module routes through here — the
+    single seam ``repro.testing.faults`` patches to inject truncation,
+    bit-flips, EIO, and slow reads without touching production code."""
+    return open(path, "rb")
+
+
+# --------------------------------------------------------------------------
+# CRC32C (Castagnoli) — the checksum of the integrity format
+# --------------------------------------------------------------------------
+
+def _crc32c_table() -> list[int]:
+    poly, table = 0x82F63B78, []
+    for i in range(256):
+        c = i
+        for _ in range(8):
+            c = (c >> 1) ^ (poly if c & 1 else 0)
+        table.append(c)
+    return table
+
+
+_PY_TABLE: Optional[list[int]] = None
+
+
+def _crc32c_py(data) -> int:
+    """Pure-python CRC32C — the dependency-free fallback (bit-identical to
+    the C extension; crc32c(b"123456789") == 0xE3069283)."""
+    global _PY_TABLE
+    if _PY_TABLE is None:
+        _PY_TABLE = _crc32c_table()
+    crc = 0xFFFFFFFF
+    for b in bytes(data):
+        crc = (crc >> 8) ^ _PY_TABLE[(crc ^ b) & 0xFF]
+    return crc ^ 0xFFFFFFFF
+
+
+try:  # google-crc32c is a C extension; fall back to the table implementation
+    from google_crc32c import value as _crc32c_c
+
+    def crc32c(data) -> int:
+        """CRC32C of a bytes-like (numpy arrays pass their buffer)."""
+        return int(_crc32c_c(bytes(memoryview(data).cast("B"))))
+
+except ImportError:  # pragma: no cover - exercised only without the extension
+    def crc32c(data) -> int:
+        """CRC32C of a bytes-like (pure-python fallback)."""
+        return _crc32c_py(memoryview(data).cast("B"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +188,12 @@ def new_io_stats() -> dict[str, int]:
         "blocks_fetched": 0,
         "container_loads": 0,  # v1 whole-file materializations
         "container_bytes_loaded": 0,
+        # integrity + fault tolerance (PR 7)
+        "read_retries": 0,  # transient-failure retries that were attempted
+        "read_failures": 0,  # ranged reads that exhausted the retry policy
+        "checksum_retries": 0,  # mismatch -> one re-read attempts
+        "checksum_failures": 0,  # mismatches that survived the re-read
+        "blocks_verified": 0,  # extent payloads whose CRC was checked
     }
 
 
@@ -125,12 +207,24 @@ def write_v2(
     *,
     align: int = DEFAULT_ALIGN,
     chunk_blocks: int = 1024,
+    integrity: bool = True,
 ) -> dict:
     """Serialize ``sf`` as a v2 block-extent container; returns size stats.
 
     Extents are produced ``chunk_blocks`` at a time through
     :func:`prepare_block_arrays`, so writing never materializes more than a
-    chunk of block-major rows regardless of dataset size."""
+    chunk of block-major rows regardless of dataset size.
+
+    The write is ATOMIC: everything lands in ``<path>.tmp.<pid>``, is
+    fsynced, and only then renamed over ``path`` — a crashed writer leaves
+    the previous container (or nothing) intact, never a half-valid file.
+
+    ``integrity=True`` (default) adds the checksum layer: a CRC32C per
+    extent payload (the checksum section after the extent table), CRCs of
+    the directory/extent-table/consensus in the header json, and the
+    end-of-file commit footer binding a CRC of the whole header region.
+    ``integrity=False`` writes the legacy (pre-checksum) layout — kept for
+    compatibility tests and for readers that predate the format."""
     if align < 4 or align % 4:
         raise ValueError(f"align must be a positive multiple of 4, got {align}")
     path = Path(path)
@@ -138,6 +232,7 @@ def write_v2(
     nb = sf.meta.n_blocks
     stride = layout.stride_nbytes
     cons = np.ascontiguousarray(sf.consensus2b, dtype=np.uint32)
+    directory = np.ascontiguousarray(sf.directory, dtype=np.int64)
     header = {
         "meta": json.loads(sf.meta.to_json()),
         "align": layout.align,
@@ -150,31 +245,97 @@ def write_v2(
         # whole-file materialization (to_sage_file) reads it back
         "cons_nbytes": int(cons.nbytes),
     }
-    hjson = json.dumps(header).encode()
-    header_nbytes = _FIXED + len(hjson) + nb * NDIR * 8 + nb * 2 * 8
-    cons_offset = align_up(header_nbytes, align)
-    data_start = align_up(cons_offset + cons.nbytes, align)
+    crc_nbytes = nb * 4 if integrity else 0
     extents = np.empty((nb, 2), dtype=np.int64)
+    if integrity:
+        header["integrity"] = {
+            "algo": "crc32c",
+            "dir_crc": crc32c(directory),
+            "cons_crc": crc32c(cons),
+            # extents_crc is appended below once offsets are known
+            "extent_crc_section": True,
+            "footer": True,
+        }
+
+    def finish_header() -> tuple[bytes, int, int, int]:
+        hjson = json.dumps(header).encode()
+        header_nbytes = _FIXED + len(hjson) + nb * NDIR * 8 + nb * 2 * 8 + crc_nbytes
+        cons_offset = align_up(header_nbytes, align)
+        data_start = align_up(cons_offset + cons.nbytes, align)
+        return hjson, header_nbytes, cons_offset, data_start
+
+    hjson, header_nbytes, cons_offset, data_start = finish_header()
     extents[:, 0] = data_start + stride * np.arange(nb, dtype=np.int64)
     extents[:, 1] = layout.payload_nbytes
+    if integrity:
+        header["integrity"]["extents_crc"] = crc32c(extents)
+        # adding the crc may change json length -> recompute until stable
+        # (extent offsets depend on header size; one extra pass suffices
+        # unless the length change crosses an alignment boundary)
+        for _ in range(8):
+            hjson, header_nbytes, cons_offset, new_start = finish_header()
+            if new_start == data_start:
+                break
+            data_start = new_start
+            extents[:, 0] = data_start + stride * np.arange(nb, dtype=np.int64)
+            header["integrity"]["extents_crc"] = crc32c(extents)
+        else:  # pragma: no cover - needs a pathological align/json interaction
+            raise RuntimeError("write_v2: header layout failed to converge")
     offsets = layout.column_offsets()
-    with open(path, "wb") as f:
-        f.write(MAGIC)
-        f.write(np.uint64(len(hjson)).tobytes())
-        f.write(hjson)
-        f.write(np.ascontiguousarray(sf.directory, dtype=np.int64).tobytes())
-        f.write(extents.tobytes())
-        f.write(b"\0" * (cons_offset - f.tell()))
-        f.write(cons.tobytes())
-        f.write(b"\0" * (data_start - f.tell()))
-        for lo in range(0, nb, chunk_blocks):
-            ids = np.arange(lo, min(lo + chunk_blocks, nb), dtype=np.int64)
-            rows = prepare_block_arrays(sf, ids)
-            buf = np.zeros((ids.size, stride // 4), dtype=np.uint32)
-            for k, w in layout.widths:
-                buf[:, offsets[k] : offsets[k] + w] = rows[k]
-            f.write(buf.tobytes())
-        file_nbytes = f.tell()
+    pw = layout.payload_words
+    extent_crcs = np.zeros(nb, dtype=np.uint32)
+    crc_section_at = _FIXED + len(hjson) + nb * NDIR * 8 + nb * 2 * 8
+    tmp = path.with_name(f"{path.name}.tmp.{os.getpid()}")
+    try:
+        with open(tmp, "w+b") as f:  # + so the footer can CRC the header back
+            f.write(MAGIC)
+            f.write(np.uint64(len(hjson)).tobytes())
+            f.write(hjson)
+            f.write(directory.tobytes())
+            f.write(extents.tobytes())
+            if integrity:
+                f.write(extent_crcs.tobytes())  # placeholder, patched below
+            f.write(b"\0" * (cons_offset - f.tell()))
+            f.write(cons.tobytes())
+            f.write(b"\0" * (data_start - f.tell()))
+            for lo in range(0, nb, chunk_blocks):
+                ids = np.arange(lo, min(lo + chunk_blocks, nb), dtype=np.int64)
+                rows = prepare_block_arrays(sf, ids)
+                buf = np.zeros((ids.size, stride // 4), dtype=np.uint32)
+                for k, w in layout.widths:
+                    buf[:, offsets[k] : offsets[k] + w] = rows[k]
+                if integrity:
+                    for bi in range(ids.size):
+                        extent_crcs[lo + bi] = crc32c(buf[bi, :pw])
+                f.write(buf.tobytes())
+            file_nbytes = f.tell()
+            if integrity:
+                f.seek(crc_section_at)
+                f.write(extent_crcs.tobytes())
+                f.seek(0)
+                header_crc = crc32c(f.read(header_nbytes))
+                f.seek(file_nbytes)
+                footer = (
+                    FOOTER_MAGIC
+                    + np.uint64(file_nbytes).tobytes()
+                    + np.uint32(header_crc).tobytes()
+                )
+                f.write(footer + np.uint32(crc32c(footer)).tobytes())
+                file_nbytes += FOOTER_NBYTES
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic publish
+        try:  # persist the rename itself (best effort on exotic filesystems)
+            dfd = os.open(path.parent, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass
+    except BaseException:
+        tmp.unlink(missing_ok=True)
+        raise
     return {
         "n_blocks": nb,
         "payload_nbytes": layout.payload_nbytes,
@@ -184,6 +345,9 @@ def write_v2(
         "data_start": data_start,
         "file_nbytes": file_nbytes,
         "align": align,
+        "integrity": integrity,
+        "checksum_nbytes": crc_nbytes,
+        "footer_nbytes": FOOTER_NBYTES if integrity else 0,
     }
 
 
@@ -194,31 +358,90 @@ def write_v2(
 class SageContainerV2:
     """Header-only handle on a v2 container with lazy ranged block I/O.
 
-    Construction reads *only* the header (meta + directory + extent table);
-    block bytes move off disk exclusively through
+    Construction reads *only* the header (meta + directory + extent table +
+    checksum section) and — for integrity containers — validates every
+    section length (``TornWriteError`` names the section that came up
+    short), the directory/extent-table CRCs, and the commit footer before
+    the handle exists. Block bytes move off disk exclusively through
     :meth:`gather_block_arrays`. No file descriptor is held between calls —
-    every gather opens, reads its coalesced ranges, and closes."""
+    every gather opens, reads its coalesced ranges, and closes.
 
-    def __init__(self, path: str | Path, *, io_stats: Optional[dict] = None) -> None:
+    ``retry`` bounds transient-failure recovery on every ranged read;
+    ``verify=False`` disables per-extent CRC checks on gather (the header
+    and footer are always validated when present)."""
+
+    def __init__(
+        self,
+        path: str | Path,
+        *,
+        io_stats: Optional[dict] = None,
+        retry: RetryPolicy = DEFAULT_RETRY,
+        verify: bool = True,
+    ) -> None:
         self.path = Path(path)
         self.io_stats = io_stats if io_stats is not None else new_io_stats()
-        with open(self.path, "rb") as f:
-            magic = f.read(len(MAGIC))
+        self.retry = retry
+        region = []  # raw header bytes, for the footer's header CRC
+
+        def read_exact(f, n: int, section: str) -> bytes:
+            data = f.read(n)
+            if len(data) != n:
+                raise TornWriteError(
+                    f"{self.path}: {section} truncated "
+                    f"({len(data)}/{n} bytes) — incomplete write",
+                    path=str(self.path), section=section,
+                )
+            region.append(data)
+            return data
+
+        with _open_read(self.path) as f:
+            magic = read_exact(f, len(MAGIC), "magic")
             if magic != MAGIC:
                 raise ValueError(
                     f"{self.path}: not a SAGe v2 container (magic {magic!r})"
                 )
-            (hlen,) = np.frombuffer(f.read(8), dtype=np.uint64)
-            header = json.loads(f.read(int(hlen)).decode())
-            self.meta = SageMeta.from_json(json.dumps(header["meta"]))
-            nb = int(header["n_blocks"])
-            self.directory = np.frombuffer(
-                f.read(nb * NDIR * 8), dtype=np.int64
-            ).reshape(nb, NDIR).copy()
-            self.extents = np.frombuffer(
-                f.read(nb * 2 * 8), dtype=np.int64
-            ).reshape(nb, 2).copy()
+            (hlen,) = np.frombuffer(read_exact(f, 8, "header length"), np.uint64)
+            try:
+                header = json.loads(
+                    read_exact(f, int(hlen), "header json").decode()
+                )
+                self.meta = SageMeta.from_json(json.dumps(header["meta"]))
+                nb = int(header["n_blocks"])
+            except (UnicodeDecodeError, json.JSONDecodeError, KeyError,
+                    TypeError, ValueError) as e:
+                raise IntegrityError(
+                    f"{self.path}: header json is unreadable ({e}) — "
+                    f"corrupt or truncated container",
+                    path=str(self.path), section="header json",
+                ) from e
+            dir_raw = read_exact(f, nb * NDIR * 8, "directory")
+            self.directory = np.frombuffer(dir_raw, dtype=np.int64).reshape(
+                nb, NDIR).copy()
+            ext_raw = read_exact(f, nb * 2 * 8, "extent table")
+            self.extents = np.frombuffer(ext_raw, dtype=np.int64).reshape(
+                nb, 2).copy()
+            self.integrity = header.get("integrity")
+            self._extent_crcs: Optional[np.ndarray] = None
+            if self.integrity and self.integrity.get("extent_crc_section"):
+                crc_raw = read_exact(f, nb * 4, "checksum section")
+                self._extent_crcs = np.frombuffer(crc_raw, np.uint32).copy()
             header_nbytes = f.tell()
+            if self.integrity:
+                for crc, raw, section in (
+                    (self.integrity.get("dir_crc"), dir_raw, "directory"),
+                    (self.integrity.get("extents_crc"), ext_raw, "extent table"),
+                ):
+                    if crc is not None and crc32c(raw) != int(crc):
+                        raise IntegrityError(
+                            f"{self.path}: {section} checksum mismatch — "
+                            f"corrupt container",
+                            path=str(self.path), section=section,
+                        )
+                if self.integrity.get("footer"):
+                    self._check_footer(f, header_nbytes, b"".join(region))
+        self._verify_extents = bool(
+            verify and self._extent_crcs is not None
+        )
         self.layout = ExtentLayout(
             widths=tuple((k, int(w)) for k, w in header["widths"]),
             align=int(header["align"]),
@@ -227,11 +450,59 @@ class SageContainerV2:
         self._cons_offset = align_up(header_nbytes, self.layout.align)
         self._cons_nbytes = int(header["cons_nbytes"])
         self.io_stats["opens"] += 1
-        self.io_stats["header_bytes"] += header_nbytes
+        self.io_stats["header_bytes"] += header_nbytes + (
+            FOOTER_NBYTES if self.integrity and self.integrity.get("footer") else 0
+        )
+
+    def _check_footer(self, f, header_nbytes: int, header_raw: bytes) -> None:
+        """Validate the end-of-file commit footer: present, self-checksummed,
+        binding the true body length and the header-region CRC. Any failure
+        means the writer never committed (or the file was damaged after)."""
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        if size < header_nbytes + FOOTER_NBYTES:
+            raise TornWriteError(
+                f"{self.path}: file too short for a commit footer "
+                f"({size} bytes) — torn write",
+                path=str(self.path), section="commit footer",
+            )
+        f.seek(size - FOOTER_NBYTES)
+        foot = f.read(FOOTER_NBYTES)
+        if (
+            len(foot) != FOOTER_NBYTES
+            or foot[: len(FOOTER_MAGIC)] != FOOTER_MAGIC
+            or crc32c(foot[:-4]) != int(np.frombuffer(foot[-4:], np.uint32)[0])
+        ):
+            raise TornWriteError(
+                f"{self.path}: commit footer missing or invalid — the "
+                f"writer never committed this container (torn write)",
+                path=str(self.path), section="commit footer",
+            )
+        (body,) = np.frombuffer(foot[8:16], np.uint64)
+        if int(body) != size - FOOTER_NBYTES:
+            raise TornWriteError(
+                f"{self.path}: commit footer records {int(body)} body bytes "
+                f"but the file has {size - FOOTER_NBYTES} — torn write",
+                path=str(self.path), section="commit footer",
+            )
+        (header_crc,) = np.frombuffer(foot[16:20], np.uint32)
+        if crc32c(header_raw) != int(header_crc):
+            raise IntegrityError(
+                f"{self.path}: header region checksum mismatch against the "
+                f"commit footer — corrupt header",
+                path=str(self.path), section="header",
+            )
 
     @classmethod
-    def open(cls, path: str | Path, *, io_stats: Optional[dict] = None) -> "SageContainerV2":
-        return cls(path, io_stats=io_stats)
+    def open(
+        cls,
+        path: str | Path,
+        *,
+        io_stats: Optional[dict] = None,
+        retry: RetryPolicy = DEFAULT_RETRY,
+        verify: bool = True,
+    ) -> "SageContainerV2":
+        return cls(path, io_stats=io_stats, retry=retry, verify=verify)
 
     @property
     def n_blocks(self) -> int:
@@ -256,19 +527,26 @@ class SageContainerV2:
         order = np.argsort(ids, kind="stable")
         sids = ids[order]
         buf = np.empty((ids.size, stride_w), dtype=np.uint32)
-        with open(self.path, "rb") as f:
+        f = _open_read(self.path)
+        try:
             i = 0
             while i < sids.size:
                 j = i + 1
                 while j < sids.size and sids[j] == sids[j - 1] + 1:
                     j += 1
-                f.seek(int(self.extents[sids[i], 0]))
+                offset = int(self.extents[sids[i], 0])
                 nbytes = (j - i) * self.stride_nbytes
-                data = f.read(nbytes)
-                buf[i:j] = np.frombuffer(data, dtype=np.uint32).reshape(j - i, stride_w)
+                run = tuple(int(b) for b in sids[i:j])
+                data, f = self._read_run(f, offset, nbytes, run)
+                rows = np.frombuffer(data, dtype=np.uint32).reshape(j - i, stride_w)
+                if self._verify_extents:
+                    rows, f = self._verify_run(f, rows, offset, nbytes, run)
+                buf[i:j] = rows
                 self.io_stats["extent_reads"] += 1
                 self.io_stats["extent_bytes_read"] += nbytes
                 i = j
+        finally:
+            f.close()
         self.io_stats["blocks_fetched"] += int(ids.size)
         if not np.array_equal(sids, ids):
             buf = buf[np.argsort(order, kind="stable")]  # back to request order
@@ -277,13 +555,112 @@ class SageContainerV2:
         arrays["dir"] = localize_directory(self.directory, ids)
         return arrays
 
+    def _read_run(self, f, offset: int, nbytes: int, blocks: tuple[int, ...]):
+        """One coalesced ranged read with bounded retry.
+
+        EIO and short reads re-seek + re-read after the policy backoff,
+        re-opening the file each retry (an EIO can poison the descriptor).
+        Returns ``(data, f)`` — the caller must keep using the returned
+        handle. Exhausted EIO → :class:`TransientIOError`; a short read
+        that persists through every attempt → :class:`TornWriteError`."""
+        policy = self.retry
+        last: Optional[BaseException] = None
+        for attempt in range(policy.attempts):
+            if attempt:
+                self.io_stats["read_retries"] += 1
+                time.sleep(policy.delay(attempt - 1))
+                try:
+                    f.close()
+                except OSError:
+                    pass
+                f = _open_read(self.path)
+                self.io_stats["opens"] += 1
+            try:
+                f.seek(offset)
+                data = f.read(nbytes)
+            except SageIOError:
+                raise
+            except OSError as e:
+                last = e
+                continue
+            if len(data) == nbytes:
+                return data, f
+            last = TornWriteError(
+                f"{self.path}: short read at offset {offset} "
+                f"({len(data)}/{nbytes} bytes) for blocks {blocks[:4]}...",
+                path=str(self.path), section=f"extent run @{offset}",
+                blocks=blocks,
+            )
+        self.io_stats["read_failures"] += 1
+        if isinstance(last, TornWriteError):
+            raise last
+        raise TransientIOError(
+            f"{self.path}: ranged read at offset {offset} ({nbytes} bytes) "
+            f"failed after {policy.attempts} attempts: {last}",
+            path=str(self.path), section=f"extent run @{offset}",
+            blocks=blocks,
+        ) from last
+
+    def _verify_run(self, f, rows: np.ndarray, offset: int, nbytes: int,
+                    blocks: tuple[int, ...]):
+        """Check every block's payload against its stored CRC32C.
+
+        A mismatch earns exactly ONE re-read of the run (a transient flip
+        between the medium and the buffer heals); a mismatch that survives
+        the re-read is provable corruption → :class:`IntegrityError` naming
+        the bad blocks. Returns ``(rows, f)``."""
+        pw = self.layout.payload_words
+        stride_w = self.stride_nbytes // 4
+
+        def bad_blocks(rows):
+            return [
+                b for bi, b in enumerate(blocks)
+                if crc32c(rows[bi, :pw]) != int(self._extent_crcs[b])
+            ]
+
+        bad = bad_blocks(rows)
+        if bad:
+            self.io_stats["checksum_retries"] += 1
+            data, f = self._read_run(f, offset, nbytes, blocks)
+            rows = np.frombuffer(data, dtype=np.uint32).reshape(-1, stride_w)
+            bad = bad_blocks(rows)
+            if bad:
+                self.io_stats["checksum_failures"] += 1
+                raise IntegrityError(
+                    f"{self.path}: extent checksum mismatch for block(s) "
+                    f"{bad} (persisted through a re-read) — corrupt extents",
+                    path=str(self.path), section=f"extent {bad[0]}",
+                    blocks=tuple(bad),
+                )
+        self.io_stats["blocks_verified"] += len(blocks)
+        return rows, f
+
     def read_consensus(self) -> np.ndarray:
         """The full 2-bit-packed consensus (its own ranged section — block
         extents carry their decode windows, so ordinary ranged reads never
-        touch this)."""
-        with open(self.path, "rb") as f:
-            f.seek(self._cons_offset)
-            data = f.read(self._cons_nbytes)
+        touch this). On integrity containers the section CRC is verified,
+        with one re-read before a mismatch becomes :class:`IntegrityError`."""
+        f = _open_read(self.path)
+        try:
+            data, f = self._read_run(
+                f, self._cons_offset, self._cons_nbytes, blocks=()
+            )
+            cons_crc = (self.integrity or {}).get("cons_crc")
+            if self._verify_extents and cons_crc is not None:
+                if crc32c(data) != int(cons_crc):
+                    self.io_stats["checksum_retries"] += 1
+                    data, f = self._read_run(
+                        f, self._cons_offset, self._cons_nbytes, blocks=()
+                    )
+                    if crc32c(data) != int(cons_crc):
+                        self.io_stats["checksum_failures"] += 1
+                        raise IntegrityError(
+                            f"{self.path}: consensus section checksum "
+                            f"mismatch (persisted through a re-read)",
+                            path=str(self.path), section="consensus",
+                        )
+        finally:
+            f.close()
         self.io_stats["consensus_bytes_read"] += self._cons_nbytes
         return np.frombuffer(data, dtype=np.uint32).copy()
 
@@ -317,17 +694,38 @@ class SageContainerV2:
 # version sniffing
 # --------------------------------------------------------------------------
 
-def container_version(path: str | Path) -> int:
+def container_version(path: str | Path, *, detail: bool = False):
     """1 for a v1 ``.npz`` archive, 2 for a v2 block-extent container.
 
     Sniffs the leading magic bytes; raises ``ValueError`` for anything
-    else (including empty/truncated files)."""
+    else (including empty/truncated files). With ``detail=True`` returns a
+    dict reporting integrity capability instead of the bare int:
+    ``{"version", "integrity", "checksums", "footer"}`` — ``integrity`` is
+    False for v1 archives and pre-checksum v2 containers (both of which
+    stay fully readable, just unverified)."""
     path = Path(path)
     with open(path, "rb") as f:
         head = f.read(len(MAGIC))
-    if head == MAGIC:
-        return 2
+        if head == MAGIC:
+            if not detail:
+                return 2
+            integ = None
+            try:
+                (hlen,) = np.frombuffer(f.read(8), dtype=np.uint64)
+                integ = json.loads(f.read(int(hlen)).decode()).get("integrity")
+            except (ValueError, UnicodeDecodeError, json.JSONDecodeError):
+                pass  # truncated/corrupt header: opening it will say why
+            integ = integ or {}
+            return {
+                "version": 2,
+                "integrity": bool(integ),
+                "checksums": bool(integ.get("extent_crc_section")),
+                "footer": bool(integ.get("footer")),
+            }
     if head[:4] == b"PK\x03\x04":  # zip archive == numpy .npz
+        if detail:
+            return {"version": 1, "integrity": False,
+                    "checksums": False, "footer": False}
         return 1
     raise ValueError(
         f"{path}: not a SAGe container (leading bytes {head!r}; expected a "
@@ -398,9 +796,16 @@ class HostExtentCache:
             self.stats["cache_peak_bytes"], self.stats["cache_bytes"]
         )
 
-    def drop(self, name: Optional[str] = None) -> None:
-        """Invalidate entries for dataset ``name`` (all when None)."""
-        keys = [k for k in self._entries if name is None or k[0] == name]
+    def drop(self, name: Optional[str] = None, group: Optional[int] = None) -> None:
+        """Invalidate entries for dataset ``name`` (all when None); with
+        ``group`` set, only that dataset's block group — the quarantine
+        path drops exactly the damaged group so healthy cached groups keep
+        serving."""
+        keys = [
+            k for k in self._entries
+            if (name is None or k[0] == name)
+            and (group is None or (len(k) > 1 and k[1] == group))
+        ]
         for k in keys:
             self.stats["cache_bytes"] -= self._entries.pop(k)[1]
 

@@ -49,6 +49,12 @@ from repro.core.decode_jax import (
     prepare_device_blocks,
 )
 from repro.core.encoder import SageEncoder
+from repro.core.errors import (
+    IntegrityError,
+    SageIOError,
+    StaleDatasetError,
+    TornWriteError,
+)
 from repro.core.format import D, SageFile, SageMeta
 from repro.core.layout import (
     HostExtentCache,
@@ -148,8 +154,10 @@ class SageStore:
         self._prepared: "OrderedDict[tuple, DeviceBlocks]" = OrderedDict()
         self._io = new_io_stats()
         self._io["group_uploads"] = 0
+        self._io["stale_retries"] = 0
         self._extent_cache = HostExtentCache(cache_budget)
         self._cache_stats: dict[str, dict[str, int]] = {}
+        self._quarantine: dict[str, set[int]] = {}
         self._lock = threading.RLock()
 
     # ---------------------------------------------------------- registration
@@ -177,6 +185,7 @@ class SageStore:
             self._readers.pop(name, None)
             self._not_v2.discard(name)
             self._extent_cache.drop(name)
+            self._quarantine.pop(name, None)  # a fresh source is healthy
             for key in [k for k in self._prepared if k[0] == name]:
                 self._prepared.pop(key)
 
@@ -330,6 +339,64 @@ class SageStore:
             )
             return float(resident.mean())
 
+    # ---------------------------------------------------------------- health
+    def health(self, name: Optional[str] = None) -> dict:
+        """Per-dataset integrity health.
+
+        One dataset: ``{"ok", "quarantined_groups"}`` — ``ok`` is False
+        while any block group is quarantined (a confirmed
+        ``IntegrityError``/``TornWriteError`` on its bytes). All datasets
+        (``name=None``): ``{dataset: {...}}`` for every registered name.
+        Quarantined groups fail fast with the original typed error on
+        re-access instead of re-reading known-bad bytes; healthy groups of
+        the same dataset keep serving (the serving frontend keys its
+        failure isolation on exactly this granularity)."""
+        with self._lock:
+            if name is not None:
+                q = tuple(sorted(self._quarantine.get(name, ())))
+                return {"ok": not q, "quarantined_groups": q}
+            return {
+                n: {
+                    "ok": not self._quarantine.get(n),
+                    "quarantined_groups": tuple(sorted(self._quarantine.get(n, ()))),
+                }
+                for n in self._sources
+            }
+
+    def clear_quarantine(self, name: str, group: Optional[int] = None) -> None:
+        """Lift quarantine after repair (``group=None`` clears the dataset).
+
+        Also drops the cached reader handle and the affected host-cache
+        entries, so the next access re-opens the container (picking up
+        rewritten bytes and their checksums) instead of trusting state
+        planned against the damaged file."""
+        with self._lock:
+            q = self._quarantine.get(name)
+            if q is None:
+                return
+            groups = tuple(q) if group is None else (group,)
+            if group is None:
+                self._quarantine.pop(name, None)
+            else:
+                q.discard(group)
+                if not q:
+                    self._quarantine.pop(name, None)
+            self._readers.pop(name, None)
+            for gi in groups:
+                self._extent_cache.drop(name, gi)
+                self._prepared.pop((name, gi), None)
+
+    def _quarantine_group(self, name: str, gi: int, err: SageIOError) -> None:
+        """Record a confirmed-corrupt group and purge every cached form of
+        it (host extent cache + device LRU) — nothing downstream can keep
+        serving bytes the checksum layer just proved wrong. Lock held."""
+        if isinstance(err, (IntegrityError, TornWriteError)):
+            self._quarantine.setdefault(name, set()).add(gi)
+        # transient failures purge caches too (the read never completed)
+        # but do NOT quarantine: the device may recover on the next access
+        self._extent_cache.drop(name, gi)
+        self._prepared.pop((name, gi), None)
+
     def block_nbytes(self, name: str) -> int:
         """Per-block device payload bytes in the prepared block-major layout
         (streams + consensus window rows) — what one block of ``name`` costs
@@ -455,6 +522,13 @@ class SageStore:
         padded arrays, so a device-evicted group re-uploads without disk."""
         key = (name, gi)
         with self._lock:
+            if gi in self._quarantine.get(name, ()):
+                raise IntegrityError(
+                    f"dataset {name!r} block group {gi} is quarantined after "
+                    f"a confirmed integrity failure; repair the container and "
+                    f"clear_quarantine() (or re-register) to serve it again",
+                    dataset=name, block_group=gi,
+                )
             if key in self._prepared:
                 self._prepared.move_to_end(key)
                 self._bump_cache(name, "hits")
@@ -465,16 +539,28 @@ class SageStore:
                 # the dataset was re-registered onto an eager source between
                 # the caller's reader check and this lock acquisition; the
                 # old lazy state is gone — a clear error beats serving a mix
-                raise RuntimeError(
+                raise StaleDatasetError(
                     f"dataset {name!r} was re-registered while a lazy read "
-                    f"was in flight; retry the read"
+                    f"was in flight; retry the read",
+                    dataset=name, block_group=gi,
                 )
             stride = self._group_stride()
             arrays = self._extent_cache.get(key)
             if arrays is None:
                 lo = gi * self.group_blocks
                 hi = min(lo + self.group_blocks, r.meta.n_blocks)
-                arrays = r.gather_block_arrays(np.arange(lo, hi, dtype=np.int64))
+                try:
+                    arrays = r.gather_block_arrays(
+                        np.arange(lo, hi, dtype=np.int64)
+                    )
+                except SageIOError as e:
+                    # annotate with store-level context, purge every cached
+                    # form of the group, and (for confirmed corruption)
+                    # quarantine it so re-access fails fast
+                    e.dataset = name
+                    e.block_group = gi
+                    self._quarantine_group(name, gi, e)
+                    raise
                 if hi - lo < stride:
                     pad = stride - (hi - lo)
                     arrays = {
@@ -513,7 +599,21 @@ class SageStore:
         request gathers only the REQUESTED rows out of each resident group
         and concatenates those (device-side ops, O(len(ids)) rows copied —
         never whole groups; no host transfer). Only the covering groups'
-        extent bytes ever leave disk."""
+        extent bytes ever leave disk.
+
+        A concurrent ``register()`` can invalidate the reader this read
+        planned against mid-flight; that race is retried ONCE here (the
+        retry re-resolves the source, so it lands on the new registration)
+        — ``io_stats["stale_retries"]`` counts them — before surfacing
+        :class:`StaleDatasetError` to the caller."""
+        try:
+            return self._prepared_for(name, ids)
+        except StaleDatasetError:
+            with self._lock:
+                self._io["stale_retries"] += 1
+            return self._prepared_for(name, ids)
+
+    def _prepared_for(self, name: str, ids) -> tuple[DeviceBlocks, np.ndarray]:
         ids = np.asarray(ids, dtype=np.int64)
         r = self._reader(name)
         if r is None:

@@ -5,6 +5,7 @@ from repro.serving.engine import (
     prompts_from_store,
 )
 from repro.serving.scheduler import (
+    DeadlineExceededError,
     QueueFullError,
     Request,
     RequestState,

@@ -31,6 +31,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.decode_jax import bucket_size
+from repro.core.errors import SageIOError
 from repro.serving.scheduler import RequestState, Scheduler, _Entry
 from repro.serving.session_pool import SessionPool
 
@@ -78,7 +79,7 @@ class ContinuousBatcher:
         self.stats = {
             "rounds": 0, "fused_reads": 0, "fused_read_requests": 0,
             "fused_blocks": 0, "consensus_calls": 0, "generate_batches": 0,
-            "deferred": 0, "skipped_backpressure": 0,
+            "deferred": 0, "skipped_backpressure": 0, "isolated_failures": 0,
         }
 
     # ------------------------------------------------------------------ step
@@ -101,9 +102,39 @@ class ContinuousBatcher:
             r.max_fetches is not None and e.fetches >= r.max_fetches
         )
 
+    def _fail_touched(self, items: list, err: SageIOError) -> list:
+        """Graceful degradation: finish ONLY the requests whose block sets
+        touch the failed block group (``err.block_group``), with the typed
+        error; return the survivors for a re-fused retry. A failure that
+        names no group — or one no item maps to — fails the whole fused
+        batch (the guard against retrying a read that can never change)."""
+        sched = self.scheduler
+        gi = getattr(err, "block_group", None)
+        gb = self.pool.store.group_blocks
+        touched = items
+        if gi is not None:
+            hit = [
+                it for it in items
+                if np.any(np.asarray(it[1], dtype=np.int64) // gb == gi)
+            ]
+            if hit:
+                touched = hit
+        for e, _ in touched:
+            sched.finish(e, err)
+        self.stats["isolated_failures"] += len(touched)
+        survivors = [it for it in items if not any(it is t for t in touched)]
+        return survivors
+
+    @staticmethod
+    def _refuse_union(items: list) -> np.ndarray:
+        return np.array(
+            sorted({int(b) for _, ids in items for b in ids}), dtype=np.int64
+        )
+
     def step(self) -> int:
         """One admission + fused-execution round; returns chunks delivered."""
         sched = self.scheduler
+        sched.expire_deadlines()  # overdue WAITING/RUNNING -> ABORTED first
         sched.admit(sched.free_slots(self.max_batch_requests))
         running = [e for e in sched.running if e.state is RequestState.RUNNING]
         if not running:
@@ -162,19 +193,31 @@ class ContinuousBatcher:
         sess = self.session()
         for (name, fmt, k), g in read_groups.items():
             union = np.array(sorted(g["ids"]), dtype=np.int64)
-            try:
-                out = sess.read(name, union, fmt, kmer_k=k)
-            except Exception as err:
-                for e, _ in g["items"]:
-                    sched.finish(e, err)
+            items = list(g["items"])
+            out = None
+            while items:
+                try:
+                    out = sess.read(name, union, fmt, kmer_k=k)
+                    break
+                except SageIOError as err:
+                    # a quarantined/corrupt/unreadable block group fails only
+                    # the tenants touching it; the rest of the fused batch
+                    # re-fuses (minus the damaged blocks) and runs
+                    items = self._fail_touched(items, err)
+                    union = self._refuse_union(items)
+                except Exception as err:
+                    for e, _ in items:
+                        sched.finish(e, err)
+                    items = []
+            if not items or out is None:
                 continue
             # one device->host materialization per FUSED decode; per-request
             # slicing below is then numpy, not a jax gather dispatch each
             out = {key: np.asarray(v) for key, v in out.items() if key != "block_ids"}
             self.stats["fused_reads"] += 1
-            self.stats["fused_read_requests"] += len(g["items"])
+            self.stats["fused_read_requests"] += len(items)
             self.stats["fused_blocks"] += int(union.size)
-            for e, ids in g["items"]:
+            for e, ids in items:
                 pos = np.searchsorted(union, ids)
                 chunk = {
                     "kind": e.request.kind,
@@ -198,14 +241,23 @@ class ContinuousBatcher:
         store = self.pool.store
         for name, g in cons_groups.items():
             union = np.array(sorted(g["ids"]), dtype=np.int64)
-            try:
-                wins, starts = store.consensus_windows(name, union)
-            except Exception as err:
-                for e, _ in g["items"]:
-                    sched.finish(e, err)
+            items = list(g["items"])
+            wins = starts = None
+            while items:
+                try:
+                    wins, starts = store.consensus_windows(name, union)
+                    break
+                except SageIOError as err:
+                    items = self._fail_touched(items, err)
+                    union = self._refuse_union(items)
+                except Exception as err:
+                    for e, _ in items:
+                        sched.finish(e, err)
+                    items = []
+            if not items or wins is None:
                 continue
             self.stats["consensus_calls"] += 1
-            for e, ids in g["items"]:
+            for e, ids in items:
                 pos = np.searchsorted(union, ids)
                 if sched.deliver(e, {
                     "kind": "consensus", "block_ids": ids,

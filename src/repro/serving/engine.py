@@ -327,6 +327,14 @@ class SageServer:
             "running": len(self.scheduler.running),
         }
 
+    def health(self, dataset: Optional[str] = None) -> dict:
+        """Integrity health of the backing store (see ``SageStore.health``):
+        which datasets have quarantined block groups. A quarantined group
+        fails only the requests touching it — this is the operator's view
+        of what degraded and what a repair + ``clear_quarantine`` (or
+        re-register) would restore."""
+        return self.pool.store.health(dataset)
+
 
 __all__ = [
     "prompts_from_store",

@@ -59,6 +59,12 @@ class QueueFullError(RuntimeError):
     caller's timeout — the ingestion-side backpressure signal."""
 
 
+class DeadlineExceededError(TimeoutError):
+    """A request's ``deadline_s`` elapsed before it finished; the scheduler
+    moved it to ABORTED (from WAITING or RUNNING) and this error is what
+    its response stream raises."""
+
+
 @dataclasses.dataclass
 class Request:
     """One unit of client work against a named SageStore dataset.
@@ -94,6 +100,12 @@ class Request:
     # scheduling
     priority: int = 0
     stream_buffer: Optional[int] = None
+    #: wall-clock budget from submit; an overdue request is moved to
+    #: ABORTED (DeadlineExceededError) from WAITING or RUNNING. None = no
+    #: deadline. Enforced by ``Scheduler.expire_deadlines`` — the batcher
+    #: calls it at the top of every step, so a stuck or backlogged loop
+    #: can delay (never skip) expiry.
+    deadline_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.kind not in KINDS:
@@ -104,6 +116,8 @@ class Request:
             raise ValueError("blocks_per_fetch must be >= 1")
         if self.stream_buffer is not None and self.stream_buffer < 1:
             raise ValueError("stream_buffer must be >= 1 or None")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 or None")
 
 
 class _End:
@@ -232,7 +246,7 @@ class Scheduler:
         self._ids = itertools.count()
         self.stats = {
             "submitted": 0, "admitted": 0, "finished": 0, "aborted": 0,
-            "rejected": 0, "chunks": 0,
+            "rejected": 0, "chunks": 0, "deadline_expired": 0,
         }
 
     # ------------------------------------------------------------- ingestion
@@ -278,6 +292,36 @@ class Scheduler:
                 self._running.remove(e)
             self._close(e, RequestState.ABORTED)
             return True
+
+    def expire_deadlines(self, now: Optional[float] = None) -> int:
+        """Move every overdue request (``deadline_s`` elapsed since submit)
+        to ABORTED with :class:`DeadlineExceededError`; returns how many.
+
+        Runs entirely under the scheduler lock, so it serializes against
+        ``abort``/``finish``/``deliver`` — a request racing its deadline
+        against a concurrent abort or final chunk still closes exactly
+        once, through :meth:`_close`."""
+        if now is None:
+            now = time.perf_counter()
+        expired = 0
+        with self._lock:
+            for e in list(self._waiting) + list(self._running):
+                d = e.request.deadline_s
+                if d is None or now - e.submit_t < d or e.state.terminal:
+                    continue
+                if e.state is RequestState.WAITING:
+                    self._waiting.remove(e)
+                    self._lock.notify_all()
+                else:
+                    self._running.remove(e)
+                e.error = DeadlineExceededError(
+                    f"request {e.rid} exceeded deadline_s={d} "
+                    f"({now - e.submit_t:.3f}s since submit, state={e.state.value})"
+                )
+                self._close(e, RequestState.ABORTED)
+                self.stats["deadline_expired"] += 1
+                expired += 1
+        return expired
 
     def admit(self, max_new: int) -> list[_Entry]:
         """Move up to ``max_new`` requests WAITING -> RUNNING in policy

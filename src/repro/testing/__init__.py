@@ -1,0 +1,21 @@
+"""Test-support utilities shipped with the library (fault injection)."""
+
+from repro.testing.faults import (
+    FaultPlan,
+    FaultyFile,
+    corrupt_extent,
+    corrupt_group,
+    flip_bit,
+    inject,
+    truncate_file,
+)
+
+__all__ = [
+    "FaultPlan",
+    "FaultyFile",
+    "corrupt_extent",
+    "corrupt_group",
+    "flip_bit",
+    "inject",
+    "truncate_file",
+]

@@ -1,0 +1,263 @@
+"""Chaos suite: the storage->serving stack under injected faults.
+
+Acceptance contract (ISSUE 7): with faults injected via
+``repro.testing.faults``, every corruption on a checksummed container is
+DETECTED — zero silent wrong decodes across all 3 formats x vmap+pallas —
+transient EIO reads succeed via bounded retry, and a quarantined block
+group fails only the requests touching it while other tenants complete."""
+
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import SageStore
+from repro.core.encoder import SageEncoder
+from repro.core.errors import (
+    IntegrityError,
+    RetryPolicy,
+    TornWriteError,
+    TransientIOError,
+)
+from repro.core.layout import write_v2
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.serving import Request, SageServer, SessionPool
+from repro.testing.faults import (
+    FaultPlan,
+    corrupt_group,
+    inject,
+    truncate_file,
+)
+
+GROUP_BLOCKS = 2
+
+
+@pytest.fixture(scope="module")
+def chaos_ds(tmp_path_factory):
+    """Encoded dataset + pristine checksummed container + clean decodes."""
+    ref = make_reference(30_000, seed=90)
+    rs = sample_read_set(ref, "illumina", depth=4, seed=91)
+    sf = SageEncoder(ref, token_target=2048).encode(rs)
+    path = tmp_path_factory.mktemp("chaos") / "ds.sage2"
+    stats = write_v2(sf, path, align=512)
+    assert sf.meta.n_blocks >= 3 * GROUP_BLOCKS, "need several residency groups"
+    return sf, str(path), stats
+
+
+@pytest.fixture()
+def working_copy(chaos_ds, tmp_path):
+    """A private copy of the container, free to damage."""
+    _, path, _ = chaos_ds
+    p = tmp_path / "ds.sage2"
+    shutil.copy(path, p)
+    return str(p)
+
+
+def fresh_store(path, **kw):
+    kw.setdefault("group_blocks", GROUP_BLOCKS)
+    store = SageStore(**kw)
+    store.register("ds", path)
+    return store
+
+
+def read_all(store, fmt="2bit", use_pallas=False):
+    sess = store.session(use_pallas=use_pallas)
+    return sess.read("ds", None, fmt=fmt, kmer_k=4)
+
+
+# -------------------------------------------------------------- transient I/O
+def test_transient_eio_read_succeeds_via_retry(chaos_ds, working_copy):
+    _, clean_path, _ = chaos_ds
+    want = read_all(fresh_store(clean_path))
+    store = fresh_store(working_copy)
+    store.meta("ds")  # prime the header-only open; faults hit ranged reads
+    with inject(FaultPlan(eio_reads=frozenset({0, 2}))) as plan:
+        got = read_all(store)
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(got["tokens"])
+    )
+    assert plan.eio_raised == 2
+    io = store.io_stats
+    assert io["read_retries"] >= 2 and io["read_failures"] == 0
+    assert store.health("ds")["ok"]  # transient faults never quarantine
+
+
+def test_persistent_eio_is_transient_error_then_recovers(working_copy):
+    store = fresh_store(working_copy)
+    store.meta("ds")
+    with pytest.raises(TransientIOError):
+        with inject(FaultPlan(eio_every=1)):
+            read_all(store)
+    io = store.io_stats
+    assert io["read_failures"] >= 1
+    # NOT quarantined (the medium may heal) and indeed it has: next read works
+    assert store.health("ds")["ok"]
+    read_all(store)
+    assert store.io_stats["read_failures"] == io["read_failures"]
+
+
+def test_slow_reads_complete_bit_identically(chaos_ds, working_copy):
+    _, clean_path, _ = chaos_ds
+    want = read_all(fresh_store(clean_path))
+    store = fresh_store(working_copy)
+    with inject(FaultPlan(slow_s=0.002)) as plan:
+        got = read_all(store)
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(got["tokens"])
+    )
+    assert plan.slow_sleeps > 0
+
+
+# -------------------------------------------- detection: zero silent decodes
+@pytest.mark.parametrize("fmt", ["2bit", "onehot", "kmer"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_at_rest_corruption_always_detected(working_copy, fmt, use_pallas):
+    """One flipped bit in an extent: the read RAISES IntegrityError — it
+    never returns wrong tokens — for every format on both decode paths."""
+    corrupt_group(working_copy, 1, GROUP_BLOCKS, byte=9, bit=6)
+    store = fresh_store(working_copy)
+    with pytest.raises(IntegrityError) as ei:
+        read_all(store, fmt=fmt, use_pallas=use_pallas)
+    assert ei.value.dataset == "ds" and ei.value.block_group == 1
+    assert not store.health("ds")["ok"]
+    assert store.health("ds")["quarantined_groups"] == (1,)
+
+
+def test_quarantine_fails_fast_and_clears_after_repair(chaos_ds, working_copy):
+    _, clean_path, _ = chaos_ds
+    undo = corrupt_group(working_copy, 1, GROUP_BLOCKS, byte=9, bit=6)
+    store = fresh_store(working_copy)
+    with pytest.raises(IntegrityError):
+        read_all(store)
+    # re-access fails fast: the quarantined group is refused WITHOUT
+    # re-reading known-bad bytes from disk
+    store.reset_io_stats()
+    with pytest.raises(IntegrityError, match="quarantined"):
+        read_all(store)
+    assert store.io_stats["extent_reads"] == 0
+    # healthy groups keep serving: a read not touching group 1 succeeds
+    out = store.session().read("ds", (0, GROUP_BLOCKS))
+    want = fresh_store(clean_path).session().read("ds", (0, GROUP_BLOCKS))
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(out["tokens"])
+    )
+    # repair + clear -> full dataset serves bit-identically again
+    undo()
+    store.clear_quarantine("ds")
+    assert store.health("ds")["ok"]
+    got = read_all(store)
+    ref = read_all(fresh_store(clean_path))
+    np.testing.assert_array_equal(
+        np.asarray(ref["tokens"]), np.asarray(got["tokens"])
+    )
+
+
+def test_reregister_also_lifts_quarantine(working_copy):
+    undo = corrupt_group(working_copy, 0, GROUP_BLOCKS)
+    store = fresh_store(working_copy)
+    with pytest.raises(IntegrityError):
+        read_all(store)
+    assert not store.health("ds")["ok"]
+    undo()
+    store.register("ds", working_copy)
+    assert store.health("ds")["ok"]
+    read_all(store)
+
+
+def test_truncated_container_refused_at_open(chaos_ds, working_copy):
+    _, _, stats = chaos_ds
+    truncate_file(working_copy, stats["file_nbytes"] - stats["stride_nbytes"])
+    store = fresh_store(working_copy)
+    with pytest.raises(TornWriteError, match="footer"):
+        read_all(store)
+
+
+# ------------------------------------------------- serving-level degradation
+def serve_pool(path, **kw):
+    pool = SessionPool(max_prepared=4, group_blocks=GROUP_BLOCKS, **kw)
+    pool.store.register("ds", path)
+    return pool
+
+
+def test_quarantined_group_fails_only_touching_requests(chaos_ds, working_copy):
+    """Two tenants fused into ONE decode; the one touching the corrupt
+    group gets the typed error, the other completes bit-identically."""
+    _, clean_path, _ = chaos_ds
+    corrupt_group(working_copy, 1, GROUP_BLOCKS, byte=3, bit=2)
+    srv = SageServer(serve_pool(working_copy))
+    g = GROUP_BLOCKS
+    healthy = srv.read("ds", (0, g))           # group 0 only
+    doomed = srv.read("ds", (g, 2 * g))        # group 1 only
+    srv.run_until_idle()
+    with pytest.raises(IntegrityError) as ei:
+        doomed.result()
+    assert ei.value.block_group == 1
+    out = healthy.result()
+    want = SessionPool(max_prepared=4, group_blocks=g)
+    want.store.register("ds", clean_path)
+    direct = want.session().read("ds", (0, g))
+    np.testing.assert_array_equal(
+        np.asarray(out["data"]["tokens"]), np.asarray(direct["tokens"])
+    )
+    assert srv.batcher.stats["isolated_failures"] == 1
+    assert srv.health("ds")["quarantined_groups"] == (1,)
+    assert srv.health() == {"ds": {"ok": False, "quarantined_groups": (1,)}}
+
+
+def test_single_request_spanning_bad_group_fails_alone(working_copy):
+    """A lone request whose union covers the bad group fails with the typed
+    error (and the loop terminates — no infinite re-fuse)."""
+    corrupt_group(working_copy, 1, GROUP_BLOCKS)
+    srv = SageServer(serve_pool(working_copy))
+    h = srv.read("ds", (0, 2 * GROUP_BLOCKS))
+    srv.run_until_idle()
+    with pytest.raises(IntegrityError):
+        h.result()
+
+
+def test_isp_stream_degrades_at_the_bad_group(chaos_ds, working_copy):
+    """A stream delivers every chunk before the damage, then surfaces the
+    typed error — partial progress is kept, not discarded."""
+    corrupt_group(working_copy, 1, GROUP_BLOCKS, byte=5, bit=1)
+    srv = SageServer(serve_pool(working_copy))
+    h = srv.submit(Request(
+        kind="isp", dataset="ds", block_range=(0, 2 * GROUP_BLOCKS),
+        blocks_per_fetch=1,
+    ))
+    srv.run_until_idle()
+    got = []
+    with pytest.raises(IntegrityError):
+        for chunk in h.chunks(timeout=5):
+            got.append(chunk["block_ids"])
+    # both group-0 chunks arrived before the group-1 fetch failed
+    assert [int(i[0]) for i in got] == list(range(GROUP_BLOCKS))
+
+
+def test_transient_eio_invisible_to_served_requests(chaos_ds, working_copy):
+    _, clean_path, _ = chaos_ds
+    srv = SageServer(serve_pool(working_copy))
+    srv.pool.store.meta("ds")
+    with inject(FaultPlan(eio_reads=frozenset({0}))):
+        h = srv.read("ds", (0, GROUP_BLOCKS))
+        srv.run_until_idle()
+        out = h.result()
+    want = SessionPool(max_prepared=4, group_blocks=GROUP_BLOCKS)
+    want.store.register("ds", clean_path)
+    direct = want.session().read("ds", (0, GROUP_BLOCKS))
+    np.testing.assert_array_equal(
+        np.asarray(out["data"]["tokens"]), np.asarray(direct["tokens"])
+    )
+    assert srv.pool.store.io_stats["read_retries"] >= 1
+    assert srv.batcher.stats["isolated_failures"] == 0
+
+
+def test_retry_policy_bounds_are_configurable(working_copy):
+    """A 1-attempt policy turns the first EIO into the typed failure —
+    proving the store threads the policy through to the ranged reader."""
+    store = fresh_store(working_copy)
+    # swap the reader's policy for a no-retry one
+    store._reader("ds").retry = RetryPolicy(attempts=1)
+    with pytest.raises(TransientIOError):
+        with inject(FaultPlan(eio_reads=frozenset({0}))):
+            read_all(store)
+    assert store.io_stats["read_retries"] == 0

@@ -1,0 +1,411 @@
+"""End-to-end integrity layer: CRC32C, the checksummed v2 format, atomic
+writes, typed errors, and the satellite fixes (stale-retry, checkpoint
+IntegrityError, migrate --verify).
+
+Acceptance contract (ISSUE 7): every truncation names its section
+(TornWriteError), every at-rest bit flip on a checksummed container is
+detected (IntegrityError, never a silent wrong decode), pre-checksum
+containers still open and serve bit-identically, and a crashed writer can
+never leave a half-valid container behind."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import SageStore
+from repro.core.encoder import SageEncoder
+from repro.core.errors import (
+    IntegrityError,
+    RetryPolicy,
+    SageIOError,
+    StaleDatasetError,
+    TornWriteError,
+)
+from repro.core.layout import (
+    FOOTER_NBYTES,
+    SageContainerV2,
+    _crc32c_py,
+    container_version,
+    crc32c,
+    write_v2,
+)
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.testing.faults import FaultPlan, corrupt_extent, flip_bit, inject
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    """One encoded dataset + checksummed v2 container + pristine bytes."""
+    ref = make_reference(30_000, seed=80)
+    rs = sample_read_set(ref, "illumina", depth=4, seed=81)
+    sf = SageEncoder(ref, token_target=2048).encode(rs)
+    path = tmp_path_factory.mktemp("integrity") / "ds.sage2"
+    stats = write_v2(sf, path, align=512)
+    return sf, str(path), stats, path.read_bytes()
+
+
+def reopen(path, **kw):
+    return SageContainerV2.open(path, **kw)
+
+
+# ------------------------------------------------------------------- crc32c
+def test_crc32c_check_value():
+    # the CRC32C (Castagnoli) check value, RFC 3720 appendix B.4
+    assert crc32c(b"123456789") == 0xE3069283
+    assert _crc32c_py(b"123456789") == 0xE3069283
+    assert crc32c(b"") == 0
+
+
+def test_crc32c_python_fallback_matches_extension():
+    rng = np.random.default_rng(0)
+    for n in (1, 7, 64, 1000):
+        data = rng.integers(0, 256, n, dtype=np.uint8)
+        assert crc32c(data) == _crc32c_py(data.tobytes())
+    # numpy arrays hash by buffer, any dtype
+    arr = rng.integers(0, 2**31, 17, dtype=np.int64)
+    assert crc32c(arr) == _crc32c_py(arr.tobytes())
+
+
+# -------------------------------------------------------- format + roundtrip
+def test_integrity_container_roundtrip(dataset):
+    sf, path, stats, _ = dataset
+    assert stats["integrity"] and stats["footer_nbytes"] == FOOTER_NBYTES
+    assert stats["checksum_nbytes"] == sf.meta.n_blocks * 4
+    c = reopen(path)
+    assert c.integrity["algo"] == "crc32c"
+    assert c.to_sage_file().diff(sf) == []
+    assert c.io_stats["checksum_failures"] == 0
+    assert c.io_stats["blocks_verified"] >= sf.meta.n_blocks
+
+
+def test_container_version_detail(dataset, tmp_path):
+    sf, path, _, _ = dataset
+    assert container_version(path) == 2
+    assert container_version(path, detail=True) == {
+        "version": 2, "integrity": True, "checksums": True, "footer": True,
+    }
+    legacy = tmp_path / "legacy.sage2"
+    write_v2(sf, legacy, integrity=False)
+    assert container_version(legacy, detail=True) == {
+        "version": 2, "integrity": False, "checksums": False, "footer": False,
+    }
+    v1 = tmp_path / "v1.sage.npz"
+    sf.save(v1)
+    assert container_version(v1, detail=True)["integrity"] is False
+
+
+def test_legacy_pre_checksum_container_serves_bit_identically(dataset, tmp_path):
+    """Old (pre-integrity) containers stay fully readable, unverified."""
+    sf, path, _, _ = dataset
+    legacy = tmp_path / "legacy.sage2"
+    write_v2(sf, legacy, integrity=False)
+    ids = np.arange(sf.meta.n_blocks, dtype=np.int64)
+    a = reopen(path).gather_block_arrays(ids)
+    c = reopen(legacy)
+    b = c.gather_block_arrays(ids)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    assert c.integrity is None
+    assert c.io_stats["blocks_verified"] == 0
+    np.testing.assert_array_equal(c.read_consensus(), sf.consensus2b)
+
+
+def test_verify_false_skips_extent_checks(dataset):
+    _, path, _, _ = dataset
+    c = reopen(path, verify=False)
+    c.gather_block_arrays(np.arange(4))
+    assert c.io_stats["blocks_verified"] == 0
+
+
+# ------------------------------------------------------------- atomic writes
+def test_atomic_write_crash_leaves_no_partial_file(dataset, tmp_path, monkeypatch):
+    """A writer that dies mid-extents leaves NO file (and no tmp litter) —
+    and never clobbers an existing good container."""
+    import repro.core.layout as layout
+
+    sf, _, _, pristine = dataset
+    target = tmp_path / "out.sage2"
+    calls = {"n": 0}
+    real = layout.prepare_block_arrays
+
+    def dying(sf_, ids):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("injected writer crash")
+        return real(sf_, ids)
+
+    monkeypatch.setattr(layout, "prepare_block_arrays", dying)
+    with pytest.raises(RuntimeError, match="injected writer crash"):
+        write_v2(sf, target, align=512, chunk_blocks=4)
+    assert not target.exists()
+    assert list(tmp_path.iterdir()) == []
+
+    # crashing over an existing container keeps the old bytes intact
+    target.write_bytes(pristine)
+    calls["n"] = 0
+    with pytest.raises(RuntimeError):
+        write_v2(sf, target, align=512, chunk_blocks=4)
+    assert target.read_bytes() == pristine
+    assert reopen(target).to_sage_file().diff(sf) == []
+
+
+# ------------------------------------------- truncation names its section
+def _section_cuts(stats, pristine):
+    """A few bytes short of each section boundary -> the section named."""
+    hj = stats["header_nbytes"]  # header region ends after the crc section
+    nb = stats["n_blocks"]
+    crc_at = hj - stats["checksum_nbytes"]  # start of checksum section
+    ext_at = crc_at - nb * 2 * 8  # start of extent table
+    return [
+        (4, "magic"),
+        (12, "header length"),
+        (30, "header json"),
+        (ext_at - 8, "directory"),  # directory comes up 8 bytes short
+        (crc_at - 8, "extent table"),
+        (hj - 2, "checksum section"),
+        (len(pristine) - 3, "commit footer"),  # footer cut mid-way
+    ]
+
+
+@pytest.mark.parametrize("which", range(7))
+def test_truncation_names_failing_section(dataset, tmp_path, which):
+    sf, _, stats, pristine = dataset
+    cut, section = _section_cuts(stats, pristine)[which]
+    p = tmp_path / f"trunc{which}.sage2"
+    p.write_bytes(pristine[:cut])
+    with pytest.raises(TornWriteError) as ei:
+        reopen(p)
+    assert ei.value.section == section
+    assert str(p) in str(ei.value)
+
+
+def test_truncated_extents_fail_footer_not_silence(dataset, tmp_path):
+    """Cutting inside the extents leaves a complete header — the commit
+    footer (bad magic at EOF / wrong body length) still refuses the file."""
+    _, _, stats, pristine = dataset
+    p = tmp_path / "torn_extents.sage2"
+    p.write_bytes(pristine[: stats["data_start"] + stats["stride_nbytes"] // 2])
+    with pytest.raises(TornWriteError, match="footer"):
+        reopen(p)
+
+
+def test_legacy_truncation_surfaces_as_torn_write(dataset, tmp_path):
+    """No footer on legacy containers — but a truncated gather is a
+    persistent short read, which the retry path types as TornWriteError."""
+    sf, _, _, _ = dataset
+    legacy = tmp_path / "legacy.sage2"
+    stats = write_v2(sf, legacy, integrity=False)
+    with open(legacy, "r+b") as f:
+        f.truncate(stats["file_nbytes"] - stats["stride_nbytes"] // 2)
+    c = reopen(legacy, retry=RetryPolicy(attempts=2, backoff_s=0.0))
+    with pytest.raises(TornWriteError, match="short read"):
+        c.gather_block_arrays(np.arange(sf.meta.n_blocks))
+    assert c.io_stats["read_failures"] == 1
+
+
+# ----------------------------------------------------- corruption detection
+def test_header_region_flip_detected_at_open(dataset, tmp_path):
+    _, _, stats, pristine = dataset
+    p = tmp_path / "dirflip.sage2"
+    data = bytearray(pristine)
+    data[stats["header_nbytes"] - stats["checksum_nbytes"] - 9] ^= 0x04  # extent table
+    p.write_bytes(bytes(data))
+    with pytest.raises((IntegrityError, TornWriteError)):
+        reopen(p)
+
+
+def test_extent_flip_detected_at_gather_with_one_reread(dataset, tmp_path):
+    _, _, _, pristine = dataset
+    p = tmp_path / "extflip.sage2"
+    p.write_bytes(pristine)
+    corrupt_extent(p, 2, byte=17, bit=3)
+    c = reopen(p)
+    with pytest.raises(IntegrityError) as ei:
+        c.gather_block_arrays(np.arange(c.n_blocks))
+    assert ei.value.blocks == (2,)
+    # exactly one re-read before giving up
+    assert c.io_stats["checksum_retries"] == 1
+    assert c.io_stats["checksum_failures"] == 1
+
+
+def test_consensus_flip_detected(dataset, tmp_path):
+    _, _, stats, pristine = dataset
+    p = tmp_path / "consflip.sage2"
+    data = bytearray(pristine)
+    cons_offset = reopen_path_cons_offset(pristine, tmp_path)
+    data[cons_offset + 5] ^= 0x80
+    p.write_bytes(bytes(data))
+    c = reopen(p)
+    with pytest.raises(IntegrityError, match="consensus"):
+        c.read_consensus()
+
+
+def reopen_path_cons_offset(pristine, tmp_path):
+    q = tmp_path / "probe.sage2"
+    q.write_bytes(pristine)
+    return SageContainerV2.open(q)._cons_offset
+
+
+def test_transient_inflight_flip_heals_via_reread(dataset, tmp_path):
+    """A flip between medium and buffer (disk is fine) costs one re-read
+    and zero errors — the checksum layer's recovery path."""
+    _, _, _, pristine = dataset
+    p = tmp_path / "clean.sage2"
+    p.write_bytes(pristine)
+    c = reopen(p)
+    off = int(c.extents[0, 0]) + 12
+    want = c.gather_block_arrays(np.arange(c.n_blocks))
+    c2 = reopen(p)
+    with inject(FaultPlan(flip_offsets={off: 0x40}, flip_times=1)):
+        got = c2.gather_block_arrays(np.arange(c2.n_blocks))
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k], err_msg=k)
+    assert c2.io_stats["checksum_retries"] == 1
+    assert c2.io_stats["checksum_failures"] == 0
+
+
+# ------------------------------------------------------- stale-dataset race
+def test_stale_dataset_direct_raise(dataset, tmp_path):
+    """_prepared_group hitting a re-registered (now eager) dataset raises
+    the typed StaleDatasetError, not a bare RuntimeError."""
+    sf, path, _, _ = dataset
+    store = SageStore(group_blocks=4)
+    store.register("ds", path)
+    store.meta("ds")  # reader exists
+    store.register("ds", sf)  # re-register onto an eager source
+    with pytest.raises(StaleDatasetError, match="re-registered"):
+        store._prepared_group("ds", 0)
+
+
+def test_prepared_for_retries_stale_once(dataset):
+    sf, path, _, _ = dataset
+    store = SageStore(group_blocks=4)
+    store.register("ds", path)
+    orig = store._prepared_for
+    calls = {"n": 0}
+
+    def flaky(name, ids):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise StaleDatasetError("injected stale race", dataset=name)
+        return orig(name, ids)
+
+    store._prepared_for = flaky
+    db, local = store.prepared_for("ds", np.arange(3))
+    assert db.n_blocks >= 3 and calls["n"] == 2
+    assert store.io_stats["stale_retries"] == 1
+
+    # a race that repeats surfaces to the caller
+    store._prepared_for = lambda name, ids: (_ for _ in ()).throw(
+        StaleDatasetError("still racing", dataset=name)
+    )
+    with pytest.raises(StaleDatasetError):
+        store.prepared_for("ds", np.arange(3))
+
+
+def test_stale_race_threaded(dataset):
+    """Hammer reads against concurrent re-registration: every read either
+    succeeds or raises the TYPED error — no bare RuntimeError, no crash."""
+    import threading
+
+    _, path, _, _ = dataset
+    store = SageStore(group_blocks=4, max_prepared=2)
+    store.register("ds", path)
+    sess = store.session()
+    errors: list[BaseException] = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            try:
+                sess.read("ds", (0, 4))
+            except StaleDatasetError:
+                pass  # the documented surface of losing the race twice
+            except BaseException as e:  # noqa: BLE001 - fail the test below
+                errors.append(e)
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for _ in range(30):
+        store.register("ds", path)
+    stop.set()
+    t.join(timeout=30)
+    assert not t.is_alive() and errors == []
+
+
+# --------------------------------------------------- checkpoint IntegrityError
+def test_checkpoint_checksum_mismatch_is_integrity_error(tmp_path):
+    from repro.checkpoint.checkpoint import CheckpointManager
+
+    ck = CheckpointManager(tmp_path / "ckpt", keep_last=2)
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    ck.save(1, tree, extra={}, block=True)
+    # corrupt the stored leaf
+    leaf = next((tmp_path / "ckpt" / "step_1").glob("*.npy"))
+    flip_bit(leaf, leaf.stat().st_size - 1, bit=0)
+    with pytest.raises(IntegrityError, match="checksum mismatch for w in step_1"):
+        ck.restore(tree, verify=True)
+    with pytest.raises(IOError):  # old-hierarchy callers still catch it
+        ck.restore(tree, verify=True)
+    # unverified restore keeps working (caller opted out of checking)
+    ck.restore(tree, verify=False)
+
+
+# --------------------------------------------------------- migrate --verify
+def _migrate_main():
+    spec = importlib.util.spec_from_file_location(
+        "migrate_container",
+        Path(__file__).resolve().parents[1] / "tools" / "migrate_container.py",
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.main
+
+
+def test_migrate_verify_ok_and_legacy(dataset, tmp_path, capsys):
+    _, path, _, _ = dataset
+    main = _migrate_main()
+    dst = tmp_path / "m.sage2"
+    assert main([str(path), str(dst), "--verify"]) == 0
+    assert container_version(dst, detail=True)["integrity"] is True
+    leg = tmp_path / "leg.sage2"
+    assert main([str(path), str(leg), "--legacy", "--verify"]) == 0
+    assert container_version(leg, detail=True)["integrity"] is False
+    assert "legacy" in capsys.readouterr().out
+
+
+def test_migrate_verify_fails_on_checksum_mismatch(dataset, tmp_path, capsys):
+    """--verify exits nonzero and prints the failing section when the
+    migrated container's bytes are damaged (in-flight, persistently)."""
+    sf, path, _, _ = dataset
+    main = _migrate_main()
+    dst = tmp_path / "bad.sage2"
+    # learn the (deterministic) extent offset from a scratch write
+    probe = tmp_path / "probe.sage2"
+    stats = write_v2(sf, probe)
+    off = stats["data_start"] + 40
+    plan = FaultPlan(flip_offsets={off: 0x08}, paths=frozenset({str(dst)}))
+    with inject(plan):
+        rc = main([str(path), str(dst), "--verify"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "VERIFY FAILED" in err and "IntegrityError" in err
+    assert "extent" in err
+    # the container itself is fine once reads stop being mangled
+    assert main([str(dst), str(tmp_path / "ok.sage2"), "--verify"]) == 0
+
+
+def test_errors_are_oserrors_with_context():
+    e = IntegrityError("boom", path="/x", section="extent 3",
+                       dataset="ds", block_group=1, blocks=(3, 4))
+    assert isinstance(e, OSError) and isinstance(e, SageIOError)
+    assert (e.path, e.section, e.dataset, e.block_group, e.blocks) == (
+        "/x", "extent 3", "ds", 1, (3, 4)
+    )
+    with pytest.raises(ValueError):
+        RetryPolicy(attempts=0)
+    assert RetryPolicy(backoff_s=0.1, mult=10, max_backoff_s=0.5).delay(3) == 0.5

@@ -81,8 +81,8 @@ def test_v2_roundtrip_variable_length(tmp_path):
 def test_header_only_open_and_sniffing(v2_setup, tmp_path):
     sf, path, stats, _ = v2_setup
     c = SageContainerV2.open(path)
-    # opening reads the header, not one extent byte
-    assert c.io_stats["header_bytes"] == stats["header_nbytes"]
+    # opening reads the header (+ the commit footer), not one extent byte
+    assert c.io_stats["header_bytes"] == stats["header_nbytes"] + stats["footer_nbytes"]
     assert c.io_stats["extent_bytes_read"] == 0
     assert stats["header_nbytes"] < stats["data_start"] <= stats["file_nbytes"]
     # version sniffing: v2 magic vs v1 zip, and SageFile.open routes both
@@ -162,7 +162,7 @@ def test_ranged_read_is_o_k_bytes(v2_setup):
     sess = store.session()
     sess.read("ds", (0, 4))  # one residency group
     io = store.io_stats
-    assert io["header_bytes"] == stats["header_nbytes"]
+    assert io["header_bytes"] == stats["header_nbytes"] + stats["footer_nbytes"]
     assert io["extent_reads"] == 1  # 4 adjacent extents -> ONE coalesced read
     assert io["extent_bytes_read"] == 4 * stats["stride_nbytes"]
     assert io["extent_bytes_read"] < stats["file_nbytes"]

@@ -7,6 +7,9 @@ device LRU, ingestion backpressure when the waiting queue is full, and
 stream backpressure pausing a lagging consumer's work.
 """
 
+import threading
+import time
+
 import numpy as np
 import pytest
 
@@ -14,6 +17,7 @@ from repro.core import SageStore
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.serving import (
     ContinuousBatcher,
+    DeadlineExceededError,
     QueueFullError,
     Request,
     RequestState,
@@ -306,3 +310,155 @@ def test_batcher_knob_validation(two_datasets):
         ContinuousBatcher(pool, Scheduler(), max_batch_requests=0)
     with pytest.raises(ValueError, match="max_union_blocks"):
         ContinuousBatcher(pool, Scheduler(), max_union_blocks=0)
+
+
+# ---------------------------------------------------------------- deadlines
+def test_deadline_validation():
+    with pytest.raises(ValueError, match="deadline_s"):
+        Request(kind="read", dataset="d", deadline_s=0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        Request(kind="read", dataset="d", deadline_s=-1.5)
+    Request(kind="read", dataset="d", deadline_s=0.5)  # valid
+
+
+def test_deadline_expires_from_waiting():
+    sched = Scheduler(policy="fcfs")
+    h = sched.submit(Request(kind="read", dataset="d", deadline_s=0.01))
+    live = sched.submit(Request(kind="read", dataset="d"))  # no deadline
+    assert sched.expire_deadlines(now=h._entry.submit_t + 1.0) == 1
+    assert h.state is RequestState.ABORTED
+    assert live.state is RequestState.WAITING
+    with pytest.raises(DeadlineExceededError, match="deadline_s=0.01"):
+        list(h.chunks(timeout=0))
+    assert sched.stats["deadline_expired"] == 1
+    assert sched.stats["aborted"] == 1
+    assert not h.abort()  # already terminal; expiry is not double-closable
+
+
+def test_deadline_expires_from_running():
+    sched = Scheduler(policy="fcfs")
+    h = sched.submit(Request(kind="read", dataset="d", deadline_s=0.01))
+    (e,) = sched.admit(1)
+    assert h.state is RequestState.RUNNING
+    assert sched.expire_deadlines(now=e.submit_t + 0.5) == 1
+    assert h.state is RequestState.ABORTED
+    assert not sched.running
+    with pytest.raises(DeadlineExceededError, match="state=running"):
+        h.result(timeout=0)
+
+
+def test_unexpired_and_deadline_free_requests_survive():
+    sched = Scheduler(policy="fcfs")
+    slow = sched.submit(Request(kind="read", dataset="d", deadline_s=60.0))
+    free = sched.submit(Request(kind="read", dataset="d"))
+    assert sched.expire_deadlines() == 0
+    assert slow.state is RequestState.WAITING
+    assert free.state is RequestState.WAITING
+    assert sched.stats["deadline_expired"] == 0
+
+
+def test_batcher_step_enforces_deadlines(two_datasets):
+    """The batcher expires overdue requests at the top of every step, so a
+    deadline holds end-to-end: the overdue request aborts with the typed
+    error while its deadline-free peer completes normally."""
+    store, _ = two_datasets
+    srv = _server(store)
+    doomed = srv.submit(
+        Request(kind="read", dataset="a", block_range=(0, 2), deadline_s=0.005)
+    )
+    ok = srv.read("a", (0, 2))
+    time.sleep(0.02)
+    srv.run_until_idle()
+    assert doomed.state is RequestState.ABORTED
+    assert ok.state is RequestState.FINISHED
+    with pytest.raises(DeadlineExceededError):
+        doomed.result(timeout=0)
+    assert srv.scheduler.stats["deadline_expired"] == 1
+
+
+# ------------------------------------------------------------ terminal races
+def test_deadline_abort_finish_race_closes_exactly_once():
+    """Hammer expire_deadlines / abort / deliver+finish concurrently over
+    requests in both live states: every request lands in EXACTLY one
+    terminal state, its channel carries exactly one closing sentinel (a
+    double-close would leave a second), and the counters add up."""
+    sched = Scheduler(policy="fcfs", max_waiting=256)
+    handles = [
+        sched.submit(Request(kind="read", dataset="d", deadline_s=0.001))
+        for _ in range(64)
+    ]
+    entries = [h._entry for h in handles]
+    sched.admit(32)  # half RUNNING, half WAITING
+    far = entries[0].submit_t + 10.0
+    start = threading.Barrier(4)
+
+    def expirer():
+        start.wait()
+        for _ in range(50):
+            sched.expire_deadlines(now=far)
+
+    def aborter():
+        start.wait()
+        for h in handles:
+            sched.abort(h.id)
+
+    def finisher():
+        start.wait()
+        for e in entries:
+            sched.deliver(e, {"rid": e.rid})
+            sched.finish(e)
+
+    threads = [threading.Thread(target=t) for t in (expirer, aborter, finisher)]
+    for t in threads:
+        t.start()
+    start.wait()
+    for t in threads:
+        t.join()
+
+    st = sched.stats
+    assert st["submitted"] == 64
+    assert st["finished"] + st["aborted"] == 64  # exactly one close each
+    assert st["deadline_expired"] == sum(
+        isinstance(e.error, DeadlineExceededError) for e in entries
+    )
+    assert not sched.has_work()
+    for h, e in zip(handles, entries):
+        assert e.state.terminal
+        # FINISHED never carries an error; ABORTED carries one only when
+        # the deadline (not a plain abort) closed it
+        if e.state is RequestState.FINISHED:
+            assert e.error is None
+        try:  # the channel always drains: chunks, then one sentinel
+            list(h.chunks(timeout=0))
+        except DeadlineExceededError:
+            pass
+        assert e.chan.qsize() == 0  # no second sentinel behind the first
+
+
+def test_deadline_vs_final_chunk_delivery():
+    """A request whose FINAL chunk races its deadline either finishes with
+    the chunk or aborts with DeadlineExceededError — never both states,
+    never neither — and the channel drains either way."""
+    for _ in range(25):
+        sched = Scheduler(policy="fcfs")
+        h = sched.submit(Request(kind="read", dataset="d", deadline_s=0.001))
+        (e,) = sched.admit(1)
+        t = threading.Thread(
+            target=sched.expire_deadlines, kwargs={"now": e.submit_t + 5.0}
+        )
+        t.start()
+        delivered = sched.deliver(e, {"done": True})
+        sched.finish(e)
+        t.join()
+        assert e.state.terminal
+        got, err = [], None
+        try:
+            got = list(h.chunks(timeout=0))
+        except DeadlineExceededError as ex:
+            err = ex
+        if e.state is RequestState.FINISHED:
+            assert delivered and got == [{"done": True}] and err is None
+        else:
+            assert err is not None  # expiry won; the stream reports it
+        assert e.chan.qsize() == 0
+        assert sched.stats["finished"] + sched.stats["aborted"] == 1

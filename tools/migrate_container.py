@@ -10,7 +10,12 @@ lazy ranged reads — see DESIGN.md §7), and back for compatibility.
 
 ``--verify`` re-opens the migrated container, materializes it, and diffs
 every section (meta, directory, consensus, all 14 streams) against the
-source — exits non-zero on any mismatch.
+source — exits non-zero on any mismatch. On v2 output this drives the full
+checksum layer (header CRCs, per-extent CRC32C, commit footer), so a
+corrupted or torn output also fails verify, printing the failing section.
+
+``--legacy`` writes the pre-checksum v2 layout (no CRC section, no commit
+footer) — for readers that predate the integrity format.
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.errors import SageIOError  # noqa: E402
 from repro.core.format import SageFile  # noqa: E402
 from repro.core.layout import (  # noqa: E402
     DEFAULT_ALIGN,
@@ -45,7 +51,10 @@ def main(argv=None) -> int:
     ap.add_argument("--align", type=int, default=DEFAULT_ALIGN,
                     help=f"v2 extent alignment in bytes (default {DEFAULT_ALIGN})")
     ap.add_argument("--verify", action="store_true",
-                    help="re-open the output and check section-by-section bit-identity")
+                    help="re-open the output and check section-by-section bit-identity "
+                         "(on v2 output this also runs the checksum layer)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="write the pre-checksum v2 layout (no CRCs, no commit footer)")
     args = ap.parse_args(argv)
 
     sf = _load_any(args.src)
@@ -54,14 +63,22 @@ def main(argv=None) -> int:
         print(f"v1 <- {args.src}: {sf.meta.n_blocks} blocks, "
               f"{os.path.getsize(args.dst)/1e6:.2f} MB -> {args.dst}")
     else:
-        stats = write_v2(sf, args.dst, align=args.align)
+        stats = write_v2(sf, args.dst, align=args.align,
+                         integrity=not args.legacy)
         print(f"v2 <- {args.src}: {stats['n_blocks']} blocks x "
               f"{stats['stride_nbytes']} B extents (payload {stats['payload_nbytes']} B), "
-              f"header {stats['header_nbytes']/1e3:.1f} KB, "
+              f"header {stats['header_nbytes']/1e3:.1f} KB"
+              f"{' (legacy, unchecksummed)' if args.legacy else ''}, "
               f"total {stats['file_nbytes']/1e6:.2f} MB -> {args.dst}")
 
     if args.verify:
-        probs = _load_any(args.dst).diff(sf)
+        try:
+            probs = _load_any(args.dst).diff(sf)
+        except SageIOError as e:
+            section = e.section or "unknown section"
+            print(f"VERIFY FAILED: {type(e).__name__} in {section}: {e}",
+                  file=sys.stderr)
+            return 1
         if probs:
             print(f"VERIFY FAILED: sections differ: {probs}", file=sys.stderr)
             return 1

@@ -18,6 +18,16 @@ v2 container using the ``repro.testing.faults`` harness:
              == healthy fraction); then repair + re-register restores
              goodput to 1.0. Transient EIO during serving stays invisible
              (goodput 1.0, zero isolated failures).
+  self-healing  the same trials on a PARITY container (DESIGN.md §10):
+             every single-extent at-rest corruption is reconstructed in
+             flight (zero failed requests, goodput 1.0, bit-identical —
+             and ``clear_quarantine`` is never called) and the scrubber
+             durably heals the medium; multi-extent damage beyond the
+             parity budget still fails ONLY its tenants with the typed
+             error and quarantines; the parity space overhead and the
+             scrubber's rate-limit adherence are reported. Gates:
+             repair_rate == 1.0, failed_requests == 0, unrecoverable
+             damage quarantined + typed, scrub within its byte budget.
 
 Contracts above are checked in --smoke (CI) and full mode alike; any
 violation exits non-zero. Writes ``BENCH_fault.json`` (see README).
@@ -37,13 +47,18 @@ import numpy as np
 
 import jax
 
-from repro.core import SageStore
+from repro.core import SageStore, Scrubber
 from repro.core.encoder import SageEncoder
-from repro.core.errors import SageIOError
-from repro.core.layout import write_v2
+from repro.core.errors import IntegrityError, SageIOError
+from repro.core.layout import SageContainerV2, write_v2
 from repro.genomics.synth import make_reference, sample_read_set
 from repro.serving import SageServer, SessionPool
-from repro.testing.faults import FaultPlan, corrupt_extent, inject
+from repro.testing.faults import (
+    FaultPlan,
+    corrupt_extent,
+    corrupt_extents,
+    inject,
+)
 
 
 def pctl(xs, q):
@@ -192,6 +207,117 @@ def bench_goodput(path: str, nb: int, gb: int, tmp: Path) -> dict:
     }
 
 
+# -------------------------------------------------------------- self-healing
+def bench_self_healing(sf, nb: int, gb: int, tmp: Path, trials: int) -> dict:
+    """ISSUE 8 acceptance: the same at-rest damage on a PARITY container.
+
+    Single-extent trials serve with ZERO failed requests (in-flight
+    reconstruction) and the scrubber then heals the medium durably —
+    ``clear_quarantine`` is never called anywhere in this function.
+    Multi-extent damage in one parity group (beyond the xor budget) still
+    quarantines and fails only its own tenants with the typed error."""
+    path = str(tmp / "healing.sage2")
+    stats = write_v2(sf, path, align=512, parity="xor", parity_group=4)
+    n_groups = -(-nb // gb)
+    rng = np.random.default_rng(11)
+    baseline = read_range(fresh_store(path, gb), None)
+
+    def serve(container: str) -> tuple[int, int, SageServer]:
+        pool = SessionPool(max_prepared=4, group_blocks=gb)
+        pool.store.register("ds", container)
+        srv = SageServer(pool)
+        hs = [
+            srv.read("ds", (g * gb, min(nb, (g + 1) * gb)))
+            for g in range(n_groups)
+        ]
+        srv.run_until_idle()
+        ok = bad = 0
+        for h in hs:
+            try:
+                ok += h.result() is not None
+            except SageIOError:
+                bad += 1
+        return ok, bad, srv
+
+    healed = failed_requests = reconstructions = 0
+    for _ in range(trials):
+        block = int(rng.integers(0, nb))
+        corrupt_extent(
+            path, block, byte=int(rng.integers(0, 256)), bit=int(rng.integers(0, 8))
+        )
+        ok, bad, srv = serve(path)
+        failed_requests += bad
+        identical = np.array_equal(
+            np.asarray(srv.pool.session().read("ds", None)["tokens"]), baseline
+        )
+        reconstructions += srv.pool.store.io_stats["reconstructions"]
+        # the background sweep durably rewrites the damaged extent
+        Scrubber(srv.pool.store, chunk_blocks=8).run_once()
+        clean = SageContainerV2.open(path).verify_blocks() == []
+        healed += (
+            ok == n_groups and identical and clean
+            and srv.health("ds")["ok"]
+        )
+    single = {
+        "trials": trials,
+        "healed": healed,
+        "repair_rate": healed / trials,
+        "failed_requests": failed_requests,
+        "reconstructions": reconstructions,
+        "clear_quarantine_calls": 0,  # structurally: never invoked here
+    }
+
+    # damage beyond the xor budget: two extents of parity group 0 (store
+    # groups 0 and 1) — exactly those two tenants fail, typed + quarantined
+    work = str(tmp / "healing_multi.sage2")
+    shutil.copy(path, work)
+    corrupt_extents(work, [0, 2], byte=9, bit=6)
+    ok, bad, srv = serve(work)
+    err_type = None
+    try:
+        srv.pool.session().read("ds", (0, gb))
+    except SageIOError as e:
+        err_type = type(e).__name__
+    unrecoverable = {
+        "submitted": n_groups,
+        "finished": ok,
+        "failed_typed": bad,
+        "typed_error": err_type,
+        "quarantined_groups": list(srv.health("ds")["quarantined_groups"]),
+        "repair_attempts": srv.batcher.stats["repair_attempts"],
+        "auto_repairs": srv.batcher.stats["auto_repairs"],
+    }
+
+    # scrub pacing on the (healed) container: a rate budget sized for a
+    # ~0.15 s sweep must actually bound the effective bandwidth
+    sweep_bytes = nb * SageContainerV2.open(path).stride_nbytes
+    rate = sweep_bytes / 0.15
+    scrub = Scrubber(fresh_store(path, gb), rate_bps=rate, chunk_blocks=4)
+    sweep = scrub.run_once()
+    scrub_rate = {
+        "rate_budget_bps": rate,
+        "bytes_scanned": sweep["bytes_scanned"],
+        "elapsed_s": sweep["elapsed_s"],
+        "effective_bps": sweep["effective_bps"],
+        "within_budget": sweep["effective_bps"] <= 1.25 * rate,
+        "complete": sweep["complete"],
+        "findings": len(sweep["findings"]),
+    }
+
+    return {
+        "parity": {
+            "scheme": stats["parity"],
+            "shards_per_group": stats["parity_shards"],
+            "group_blocks": stats["parity_group"],
+            "overhead": stats["parity_overhead"],
+            "file_nbytes": stats["file_nbytes"],
+        },
+        "single_extent": single,
+        "unrecoverable": unrecoverable,
+        "scrub_rate": scrub_rate,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="tiny dataset, CI mode")
@@ -223,6 +349,7 @@ def main(argv=None) -> int:
             "detection": bench_detection(path, nb, gb, trials),
             "recovery": bench_recovery(path, gb, trials),
             "goodput": bench_goodput(path, nb, gb, tmp),
+            "self_healing": bench_self_healing(sf, nb, gb, tmp, trials),
         }
 
     with open(args.out, "w") as f:
@@ -246,6 +373,18 @@ def main(argv=None) -> int:
         f"after repair {100 * g['after_repair']['goodput']:.0f}%, "
         f"under transient EIO {100 * g['transient_eio']['goodput']:.0f}%"
     )
+    sh = report["self_healing"]
+    se, un, sr = sh["single_extent"], sh["unrecoverable"], sh["scrub_rate"]
+    print(
+        f"self-healing x{se['trials']} ({sh['parity']['scheme']} parity, "
+        f"+{100 * sh['parity']['overhead']:.1f}% space): "
+        f"{100 * se['repair_rate']:.0f}% healed, {se['failed_requests']} failed "
+        f"requests, {se['reconstructions']} in-flight reconstructions; "
+        f"beyond-budget damage -> {un['failed_typed']}/{un['submitted']} typed "
+        f"failures, quarantined {un['quarantined_groups']}; scrub "
+        f"{sr['effective_bps'] / 1e6:.2f} MB/s vs budget "
+        f"{sr['rate_budget_bps'] / 1e6:.2f} MB/s"
+    )
     print(f"wrote {args.out}")
 
     ok = (
@@ -258,6 +397,17 @@ def main(argv=None) -> int:
         and g["after_repair"]["goodput"] == 1.0
         and g["transient_eio"]["goodput"] == 1.0
         and g["transient_eio"]["isolated_failures"] == 0
+        # --- self-healing gates (ISSUE 8) ---
+        and se["repair_rate"] == 1.0
+        and se["failed_requests"] == 0
+        and se["clear_quarantine_calls"] == 0
+        and un["failed_typed"] == 2  # exactly the two damaged store groups
+        and un["finished"] == un["submitted"] - 2
+        and un["typed_error"] == IntegrityError.__name__
+        and len(un["quarantined_groups"]) >= 1
+        and un["auto_repairs"] == 0  # beyond budget: nothing falsely healed
+        and sr["within_budget"]
+        and sr["complete"]
     )
     if not ok:
         print("GATE FAILURE", file=sys.stderr)

@@ -46,4 +46,5 @@ from repro.core.layout import (
     open_container,
     write_v2,
 )
+from repro.core.scrub import Scrubber
 from repro.core.store import SageReadSession, SageStore, StreamBatch, slice_device_blocks

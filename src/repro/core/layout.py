@@ -49,6 +49,22 @@ checksum mismatch earns exactly one re-read before raising. Containers
 written before this revision have no checksum section — they still open
 and serve bit-identically, with verification skipped
 (``container_version(path, detail=True)`` reports the capability).
+
+**Self-healing (PR 8).** ``write_v2(parity=...)`` appends a parity section
+after the data extents: every ``parity_group`` adjacent extents form a
+parity group protected by one XOR shard (``parity="xor"``) or ``m``
+Reed-Solomon-style shards over GF(256) (``parity="rs"``, see
+:mod:`repro.core.parity`). Parity shards are stride-aligned extents with
+their own CRC32C array (appended to the checksum section, so the commit
+footer binds them too). On a persistent extent checksum mismatch the
+reader RECONSTRUCTS the damaged payload from the group's survivors +
+parity, re-verifies the rebuilt bytes against the stored extent CRC, and
+serves them (``io_stats["reconstructions"]``) — only damage exceeding the
+group's parity budget still raises ``IntegrityError``
+(``reconstruction_failures``). :meth:`SageContainerV2.rewrite_extents`
+patches repaired extents back to disk atomically so
+``SageStore.repair`` can make the healing durable. Parity is opt-in:
+containers written without it are bit-identical to pre-PR-8 output.
 """
 
 from __future__ import annotations
@@ -56,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 import time
 from collections import OrderedDict
 from pathlib import Path
@@ -77,6 +94,12 @@ from repro.core.errors import (
     TransientIOError,
 )
 from repro.core.format import D, NDIR, STREAMS, SageFile, SageMeta
+from repro.core.parity import (
+    MAX_GROUP,
+    encode_parity,
+    n_shards,
+    recover_erasures,
+)
 
 MAGIC = b"SAGE2EXT"
 FOOTER_MAGIC = b"SAGE2FIN"
@@ -194,6 +217,11 @@ def new_io_stats() -> dict[str, int]:
         "checksum_retries": 0,  # mismatch -> one re-read attempts
         "checksum_failures": 0,  # mismatches that survived the re-read
         "blocks_verified": 0,  # extent payloads whose CRC was checked
+        # self-healing (PR 8)
+        "parity_reads": 0,  # parity shard reads issued
+        "parity_bytes_read": 0,
+        "reconstructions": 0,  # damaged extents rebuilt from parity
+        "reconstruction_failures": 0,  # damage exceeding the parity budget
     }
 
 
@@ -208,6 +236,9 @@ def write_v2(
     align: int = DEFAULT_ALIGN,
     chunk_blocks: int = 1024,
     integrity: bool = True,
+    parity: Optional[str] = None,
+    parity_group: int = 16,
+    parity_shards: int = 2,
 ) -> dict:
     """Serialize ``sf`` as a v2 block-extent container; returns size stats.
 
@@ -224,9 +255,28 @@ def write_v2(
     the directory/extent-table/consensus in the header json, and the
     end-of-file commit footer binding a CRC of the whole header region.
     ``integrity=False`` writes the legacy (pre-checksum) layout — kept for
-    compatibility tests and for readers that predate the format."""
+    compatibility tests and for readers that predate the format.
+
+    ``parity`` (opt-in) appends the self-healing section: ``"xor"`` adds
+    one parity shard per ``parity_group`` adjacent extents, ``"rs"`` adds
+    ``parity_shards`` GF(256) shards (tolerating that many damaged extents
+    per group). Parity requires the integrity layer — the shards are only
+    usable when corruption is detectable."""
     if align < 4 or align % 4:
         raise ValueError(f"align must be a positive multiple of 4, got {align}")
+    if parity is not None:
+        if not integrity:
+            raise ValueError(
+                "parity requires integrity=True (reconstruction needs the "
+                "per-extent checksums to locate erasures)"
+            )
+        if not (1 <= parity_group <= MAX_GROUP):
+            raise ValueError(
+                f"parity_group must be in [1, {MAX_GROUP}], got {parity_group}"
+            )
+        m_par = n_shards(parity, parity_shards)  # validates the scheme too
+        # parity groups must never straddle a write chunk
+        chunk_blocks = align_up(max(chunk_blocks, parity_group), parity_group)
     path = Path(path)
     layout = ExtentLayout.from_meta(sf.meta, align)
     nb = sf.meta.n_blocks
@@ -245,7 +295,9 @@ def write_v2(
         # whole-file materialization (to_sage_file) reads it back
         "cons_nbytes": int(cons.nbytes),
     }
-    crc_nbytes = nb * 4 if integrity else 0
+    n_groups = -(-nb // parity_group) if parity is not None else 0
+    n_par = n_groups * m_par if parity is not None else 0
+    crc_nbytes = (nb + n_par) * 4 if integrity else 0
     extents = np.empty((nb, 2), dtype=np.int64)
     if integrity:
         header["integrity"] = {
@@ -255,6 +307,13 @@ def write_v2(
             # extents_crc is appended below once offsets are known
             "extent_crc_section": True,
             "footer": True,
+        }
+    if parity is not None:
+        header["parity"] = {
+            "scheme": parity,
+            "group_blocks": parity_group,
+            "shards": m_par,
+            "n_groups": n_groups,
         }
 
     def finish_header() -> tuple[bytes, int, int, int]:
@@ -284,6 +343,11 @@ def write_v2(
     offsets = layout.column_offsets()
     pw = layout.payload_words
     extent_crcs = np.zeros(nb, dtype=np.uint32)
+    parity_crcs = np.zeros(n_par, dtype=np.uint32)
+    # parity shards accumulate here (one stride-sized row each) and land
+    # after the last data extent; groups never span chunks, so each chunk
+    # fully determines its groups' shards
+    parity_buf = np.zeros((n_par, stride), dtype=np.uint8)
     crc_section_at = _FIXED + len(hjson) + nb * NDIR * 8 + nb * 2 * 8
     tmp = path.with_name(f"{path.name}.tmp.{os.getpid()}")
     try:
@@ -295,6 +359,8 @@ def write_v2(
             f.write(extents.tobytes())
             if integrity:
                 f.write(extent_crcs.tobytes())  # placeholder, patched below
+                if parity is not None:
+                    f.write(parity_crcs.tobytes())  # placeholder too
             f.write(b"\0" * (cons_offset - f.tell()))
             f.write(cons.tobytes())
             f.write(b"\0" * (data_start - f.tell()))
@@ -307,11 +373,24 @@ def write_v2(
                 if integrity:
                     for bi in range(ids.size):
                         extent_crcs[lo + bi] = crc32c(buf[bi, :pw])
+                if parity is not None:
+                    for g0 in range(lo, lo + ids.size, parity_group):
+                        g = g0 // parity_group
+                        sl = slice(g0 - lo, min(g0 - lo + parity_group, ids.size))
+                        data = np.ascontiguousarray(buf[sl, :pw]).view(np.uint8)
+                        shards = encode_parity(data, m_par)
+                        for j in range(m_par):
+                            parity_buf[g * m_par + j, : 4 * pw] = shards[j]
+                            parity_crcs[g * m_par + j] = crc32c(shards[j])
                 f.write(buf.tobytes())
+            if parity is not None:
+                f.write(parity_buf.tobytes())  # data end is aligned: no gap
             file_nbytes = f.tell()
             if integrity:
                 f.seek(crc_section_at)
                 f.write(extent_crcs.tobytes())
+                if parity is not None:
+                    f.write(parity_crcs.tobytes())
                 f.seek(0)
                 header_crc = crc32c(f.read(header_nbytes))
                 f.seek(file_nbytes)
@@ -348,6 +427,11 @@ def write_v2(
         "integrity": integrity,
         "checksum_nbytes": crc_nbytes,
         "footer_nbytes": FOOTER_NBYTES if integrity else 0,
+        "parity": parity,
+        "parity_group": parity_group if parity is not None else 0,
+        "parity_shards": m_par if parity is not None else 0,
+        "parity_nbytes": n_par * stride,
+        "parity_overhead": (n_par * stride / (nb * stride)) if nb and parity else 0.0,
     }
 
 
@@ -425,6 +509,12 @@ class SageContainerV2:
             if self.integrity and self.integrity.get("extent_crc_section"):
                 crc_raw = read_exact(f, nb * 4, "checksum section")
                 self._extent_crcs = np.frombuffer(crc_raw, np.uint32).copy()
+            self.parity = header.get("parity")
+            self._parity_crcs: Optional[np.ndarray] = None
+            if self.parity is not None:
+                n_par = int(self.parity["n_groups"]) * int(self.parity["shards"])
+                pcrc_raw = read_exact(f, n_par * 4, "parity checksum section")
+                self._parity_crcs = np.frombuffer(pcrc_raw, np.uint32).copy()
             header_nbytes = f.tell()
             if self.integrity:
                 for crc, raw, section in (
@@ -447,6 +537,11 @@ class SageContainerV2:
             align=int(header["align"]),
         )
         self.stride_nbytes = int(header["stride_nbytes"])
+        # parity shards sit directly after the last data extent (the data
+        # region ends stride-aligned, so no derived-offset padding)
+        self._parity_start = (
+            int(self.extents[:, 0].max()) + self.stride_nbytes if nb else 0
+        )
         self._cons_offset = align_up(header_nbytes, self.layout.align)
         self._cons_nbytes = int(header["cons_nbytes"])
         self.io_stats["opens"] += 1
@@ -626,6 +721,18 @@ class SageContainerV2:
             bad = bad_blocks(rows)
             if bad:
                 self.io_stats["checksum_failures"] += 1
+                if self.parity is not None:
+                    # degraded-mode read: rebuild the damaged payloads from
+                    # parity + survivors and serve them (the medium is still
+                    # damaged — SageStore.repair makes this durable)
+                    rebuilt = self.reconstruct_blocks(bad)
+                    rows = rows.copy()
+                    for bi, b in enumerate(blocks):
+                        if b in rebuilt:
+                            rows[bi, :pw] = rebuilt[b].view(np.uint32)
+                            rows[bi, pw:] = 0
+                    self.io_stats["blocks_verified"] += len(blocks)
+                    return rows, f
                 raise IntegrityError(
                     f"{self.path}: extent checksum mismatch for block(s) "
                     f"{bad} (persisted through a re-read) — corrupt extents",
@@ -634,6 +741,279 @@ class SageContainerV2:
                 )
         self.io_stats["blocks_verified"] += len(blocks)
         return rows, f
+
+    # -------------------------------------------------- self-healing (PR 8)
+
+    def _read_checked(self, f, offset: int, crc: int, blocks: tuple[int, ...]):
+        """Read one stride-sized slot and CRC-check its payload bytes.
+
+        One re-read on mismatch (same contract as :meth:`_verify_run`);
+        a persistent mismatch returns ``(None, f)`` instead of raising —
+        the healing paths treat it as an erasure, the scrub paths as a
+        finding."""
+        L = self.layout.payload_nbytes
+        data, f = self._read_run(f, offset, self.stride_nbytes, blocks)
+        row = np.frombuffer(data, np.uint8)[:L]
+        if crc32c(row) != int(crc):
+            self.io_stats["checksum_retries"] += 1
+            data, f = self._read_run(f, offset, self.stride_nbytes, blocks)
+            row = np.frombuffer(data, np.uint8)[:L]
+            if crc32c(row) != int(crc):
+                return None, f
+        return row.copy(), f
+
+    def reconstruct_blocks(self, bad) -> dict[int, np.ndarray]:
+        """Rebuild damaged extent payloads from parity + surviving extents.
+
+        ``bad`` are block ids whose payloads failed their CRC. Every
+        parity group touched is solved independently: surviving members
+        and intact parity shards are read (and verified) from disk, the
+        erasures recovered over GF(256), and each rebuilt payload verified
+        against the stored extent CRC before it is returned as a
+        ``{block_id: uint8 payload}`` entry. Damage exceeding a group's
+        intact parity shards raises :class:`IntegrityError` naming every
+        damaged block (``reconstruction_failures`` counts them)."""
+        if self.parity is None or self._extent_crcs is None:
+            raise IntegrityError(
+                f"{self.path}: container has no parity section — "
+                f"cannot reconstruct blocks {tuple(bad)[:4]}",
+                path=str(self.path), section="parity",
+                blocks=tuple(int(b) for b in bad),
+            )
+        pg = int(self.parity["group_blocks"])
+        m = int(self.parity["shards"])
+        L = self.layout.payload_nbytes
+        stride = self.stride_nbytes
+        groups: dict[int, set[int]] = {}
+        for b in {int(x) for x in bad}:
+            groups.setdefault(b // pg, set()).add(b)
+        out: dict[int, np.ndarray] = {}
+        f = _open_read(self.path)
+        self.io_stats["opens"] += 1
+        try:
+            for g in sorted(groups):
+                erased_set = set(groups[g])
+                known: dict[int, np.ndarray] = {}
+                for b in range(g * pg, min((g + 1) * pg, self.n_blocks)):
+                    if b in erased_set:
+                        continue
+                    row, f = self._read_checked(
+                        f, int(self.extents[b, 0]), self._extent_crcs[b], (b,)
+                    )
+                    self.io_stats["extent_reads"] += 1
+                    self.io_stats["extent_bytes_read"] += stride
+                    if row is None:  # collateral damage found while solving
+                        erased_set.add(b)
+                    else:
+                        known[b - g * pg] = row
+                par: dict[int, np.ndarray] = {}
+                for j in range(m):
+                    p = g * m + j
+                    row, f = self._read_checked(
+                        f, self._parity_start + p * stride,
+                        self._parity_crcs[p], (),
+                    )
+                    self.io_stats["parity_reads"] += 1
+                    self.io_stats["parity_bytes_read"] += stride
+                    if row is not None:
+                        par[j] = row
+                erased = sorted(b - g * pg for b in erased_set)
+                try:
+                    rebuilt = recover_erasures(known, erased, par, L)
+                except ValueError as e:
+                    self.io_stats["reconstruction_failures"] += len(erased_set)
+                    raise IntegrityError(
+                        f"{self.path}: unrecoverable damage — "
+                        f"{len(erased)} damaged extent(s) "
+                        f"{tuple(sorted(erased_set))} in parity group {g} "
+                        f"exceed its {len(par)} intact parity shard(s)",
+                        path=str(self.path), section=f"parity group {g}",
+                        blocks=tuple(sorted(erased_set)),
+                    ) from e
+                for pos, row in rebuilt.items():
+                    b = g * pg + pos
+                    if crc32c(row) != int(self._extent_crcs[b]):
+                        self.io_stats["reconstruction_failures"] += 1
+                        raise IntegrityError(
+                            f"{self.path}: rebuilt extent {b} failed CRC "
+                            f"verification — parity or survivors corrupt",
+                            path=str(self.path), section=f"extent {b}",
+                            blocks=(b,),
+                        )
+                    out[b] = row
+                    self.io_stats["reconstructions"] += 1
+        finally:
+            f.close()
+        return out
+
+    def verify_blocks(self, ids=None) -> list[int]:
+        """Scrub-scan extent payload CRCs WITHOUT raising; returns the
+        damaged block ids (each mismatch got one re-read first). ``None``
+        scans every block. No-op ``[]`` on pre-checksum containers."""
+        if self._extent_crcs is None:
+            return []
+        todo = (
+            range(self.n_blocks) if ids is None
+            else sorted({int(x) for x in np.asarray(ids).reshape(-1)})
+        )
+        bad: list[int] = []
+        f = _open_read(self.path)
+        self.io_stats["opens"] += 1
+        try:
+            for b in todo:
+                if not 0 <= b < self.n_blocks:
+                    raise IndexError(
+                        f"block id {b} out of bounds for {self.path} "
+                        f"({self.n_blocks} blocks)"
+                    )
+                row, f = self._read_checked(
+                    f, int(self.extents[b, 0]), self._extent_crcs[b], (b,)
+                )
+                self.io_stats["extent_reads"] += 1
+                self.io_stats["extent_bytes_read"] += self.stride_nbytes
+                self.io_stats["blocks_verified"] += 1
+                if row is None:
+                    bad.append(b)
+        finally:
+            f.close()
+        return bad
+
+    def verify_parity(self, groups=None) -> list[int]:
+        """Scrub-scan parity shard CRCs; returns damaged shard indices
+        (``group * shards + j``). ``groups`` limits the scan to those
+        parity groups. ``[]`` when the container carries no parity."""
+        if self.parity is None:
+            return []
+        m = int(self.parity["shards"])
+        n_par = int(self.parity["n_groups"]) * m
+        ps = (
+            range(n_par) if groups is None
+            else sorted({int(g) * m + j for g in groups for j in range(m)})
+        )
+        bad: list[int] = []
+        f = _open_read(self.path)
+        self.io_stats["opens"] += 1
+        try:
+            for p in ps:
+                row, f = self._read_checked(
+                    f, self._parity_start + p * self.stride_nbytes,
+                    self._parity_crcs[p], (),
+                )
+                self.io_stats["parity_reads"] += 1
+                self.io_stats["parity_bytes_read"] += self.stride_nbytes
+                if row is None:
+                    bad.append(p)
+        finally:
+            f.close()
+        return bad
+
+    def rebuild_parity(self, shards) -> dict[int, np.ndarray]:
+        """Recompute damaged parity shards from their groups' (verified)
+        data extents — the inverse direction of :meth:`reconstruct_blocks`.
+        Raises :class:`IntegrityError` if a group member is itself damaged
+        (repair the data first, then the parity)."""
+        if self.parity is None:
+            return {}
+        pg = int(self.parity["group_blocks"])
+        m = int(self.parity["shards"])
+        out: dict[int, np.ndarray] = {}
+        f = _open_read(self.path)
+        self.io_stats["opens"] += 1
+        try:
+            for g in sorted({int(p) // m for p in shards}):
+                rows = []
+                for b in range(g * pg, min((g + 1) * pg, self.n_blocks)):
+                    row, f = self._read_checked(
+                        f, int(self.extents[b, 0]), self._extent_crcs[b], (b,)
+                    )
+                    self.io_stats["extent_reads"] += 1
+                    self.io_stats["extent_bytes_read"] += self.stride_nbytes
+                    if row is None:
+                        raise IntegrityError(
+                            f"{self.path}: cannot rebuild parity for group "
+                            f"{g}: member extent {b} is damaged — "
+                            f"reconstruct the data first",
+                            path=str(self.path), section=f"extent {b}",
+                            blocks=(b,),
+                        )
+                    rows.append(row)
+                enc = encode_parity(np.stack(rows), m)
+                for p in shards:
+                    if int(p) // m == g:
+                        out[int(p)] = enc[int(p) % m]
+        finally:
+            f.close()
+        return out
+
+    def rewrite_extents(
+        self,
+        payloads: dict[int, np.ndarray],
+        parity_payloads: Optional[dict[int, np.ndarray]] = None,
+    ) -> None:
+        """Atomically patch repaired payloads back into the container.
+
+        The whole file is copied to a same-directory tmp, the given data
+        extents (and parity shards) are seek-patched with their stride pad
+        re-zeroed, fsynced, and ``os.replace``d over the original — a
+        crashed repair leaves the damaged-but-consistent container intact.
+        Every payload must match its STORED CRC (repair only ever restores
+        the committed bytes), so this handle stays valid afterwards."""
+
+        def as_bytes(row, nbytes: int, what: str) -> bytes:
+            row = np.ascontiguousarray(row)
+            if row.dtype != np.uint8:
+                row = row.view(np.uint8)
+            if row.nbytes != nbytes:
+                raise ValueError(
+                    f"{what}: payload must be {nbytes} bytes, got {row.nbytes}"
+                )
+            return row.tobytes()
+
+        L = self.layout.payload_nbytes
+        stride = self.stride_nbytes
+        pad = b"\0" * (stride - L)
+        tmp = self.path.with_name(f"{self.path.name}.tmp.{os.getpid()}")
+        try:
+            with open(self.path, "rb") as src, open(tmp, "wb") as dst:
+                shutil.copyfileobj(src, dst)
+            with open(tmp, "r+b") as f:
+                for b, row in sorted((payloads or {}).items()):
+                    b = int(b)
+                    raw = as_bytes(row, L, f"extent {b}")
+                    if crc32c(raw) != int(self._extent_crcs[b]):
+                        raise IntegrityError(
+                            f"{self.path}: refusing to rewrite extent {b} "
+                            f"with bytes that do not match its stored CRC",
+                            path=str(self.path), section=f"extent {b}",
+                            blocks=(b,),
+                        )
+                    f.seek(int(self.extents[b, 0]))
+                    f.write(raw + pad)
+                for p, row in sorted((parity_payloads or {}).items()):
+                    p = int(p)
+                    raw = as_bytes(row, L, f"parity shard {p}")
+                    if crc32c(raw) != int(self._parity_crcs[p]):
+                        raise IntegrityError(
+                            f"{self.path}: refusing to rewrite parity shard "
+                            f"{p} with bytes that do not match its stored CRC",
+                            path=str(self.path), section=f"parity shard {p}",
+                        )
+                    f.seek(self._parity_start + p * stride)
+                    f.write(raw + pad)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)  # atomic publish, like write_v2
+            try:
+                dfd = os.open(self.path.parent, os.O_RDONLY)
+                try:
+                    os.fsync(dfd)
+                finally:
+                    os.close(dfd)
+            except OSError:
+                pass
+        except BaseException:
+            tmp.unlink(missing_ok=True)
+            raise
 
     def read_consensus(self) -> np.ndarray:
         """The full 2-bit-packed consensus (its own ranged section — block
@@ -709,23 +1089,26 @@ def container_version(path: str | Path, *, detail: bool = False):
         if head == MAGIC:
             if not detail:
                 return 2
-            integ = None
+            hdr = {}
             try:
                 (hlen,) = np.frombuffer(f.read(8), dtype=np.uint64)
-                integ = json.loads(f.read(int(hlen)).decode()).get("integrity")
+                hdr = json.loads(f.read(int(hlen)).decode())
             except (ValueError, UnicodeDecodeError, json.JSONDecodeError):
                 pass  # truncated/corrupt header: opening it will say why
-            integ = integ or {}
+            integ = hdr.get("integrity") or {}
+            par = hdr.get("parity") or {}
             return {
                 "version": 2,
                 "integrity": bool(integ),
                 "checksums": bool(integ.get("extent_crc_section")),
                 "footer": bool(integ.get("footer")),
+                "parity": par.get("scheme"),
+                "parity_shards": int(par.get("shards", 0)),
             }
     if head[:4] == b"PK\x03\x04":  # zip archive == numpy .npz
         if detail:
-            return {"version": 1, "integrity": False,
-                    "checksums": False, "footer": False}
+            return {"version": 1, "integrity": False, "checksums": False,
+                    "footer": False, "parity": None, "parity_shards": 0}
         return 1
     raise ValueError(
         f"{path}: not a SAGe container (leading bytes {head!r}; expected a "
@@ -763,7 +1146,8 @@ class HostExtentCache:
         self._entries: "OrderedDict[tuple, tuple[dict, int]]" = OrderedDict()
         self.stats = {
             "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
-            "cache_oversize_skips": 0, "cache_bytes": 0, "cache_peak_bytes": 0,
+            "cache_oversize_skips": 0, "cache_drops": 0,
+            "cache_bytes": 0, "cache_peak_bytes": 0,
         }
 
     def get(self, key) -> Optional[dict]:
@@ -808,6 +1192,7 @@ class HostExtentCache:
         ]
         for k in keys:
             self.stats["cache_bytes"] -= self._entries.pop(k)[1]
+            self.stats["cache_drops"] += 1
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -80,7 +80,9 @@ class ContinuousBatcher:
             "rounds": 0, "fused_reads": 0, "fused_read_requests": 0,
             "fused_blocks": 0, "consensus_calls": 0, "generate_batches": 0,
             "deferred": 0, "skipped_backpressure": 0, "isolated_failures": 0,
+            "repair_attempts": 0, "auto_repairs": 0,
         }
+        self._repair_attempted: set[tuple] = set()
 
     # ------------------------------------------------------------------ step
     def session(self):
@@ -101,6 +103,31 @@ class ContinuousBatcher:
         return e.cursor >= self._resolve(e).size or (
             r.max_fetches is not None and e.fetches >= r.max_fetches
         )
+
+    def _maybe_repair(self, err: SageIOError) -> bool:
+        """Targeted self-healing: before failing a fused batch's tenants on
+        a group-scoped storage error, try ONE ``store.repair`` of exactly
+        the damaged group (scrub-and-repair on demand). True means the
+        group re-verified clean — the caller retries the fused read instead
+        of failing anyone. Each (dataset, group) gets a single attempt per
+        batcher lifetime, so an un-healable group degrades to the fail-fast
+        path instead of a repair loop; the background scrubber owns
+        anything beyond that."""
+        name = getattr(err, "dataset", None)
+        gi = getattr(err, "block_group", None)
+        if name is None or gi is None:
+            return False
+        key = (name, gi)
+        if key in self._repair_attempted:
+            return False
+        self._repair_attempted.add(key)
+        self.stats["repair_attempts"] += 1
+        try:
+            self.pool.store.repair(name, group=gi)
+        except (SageIOError, ValueError):
+            return False  # unrecoverable (or not repairable): quarantined
+        self.stats["auto_repairs"] += 1
+        return True
 
     def _fail_touched(self, items: list, err: SageIOError) -> list:
         """Graceful degradation: finish ONLY the requests whose block sets
@@ -200,9 +227,13 @@ class ContinuousBatcher:
                     out = sess.read(name, union, fmt, kmer_k=k)
                     break
                 except SageIOError as err:
-                    # a quarantined/corrupt/unreadable block group fails only
-                    # the tenants touching it; the rest of the fused batch
-                    # re-fuses (minus the damaged blocks) and runs
+                    # first choice: heal the damaged group in place and
+                    # retry the whole fused read — nobody fails
+                    if self._maybe_repair(err):
+                        continue
+                    # otherwise a quarantined/corrupt/unreadable block group
+                    # fails only the tenants touching it; the rest of the
+                    # fused batch re-fuses (minus the damaged blocks) and runs
                     items = self._fail_touched(items, err)
                     union = self._refuse_union(items)
                 except Exception as err:
@@ -248,6 +279,8 @@ class ContinuousBatcher:
                     wins, starts = store.consensus_windows(name, union)
                     break
                 except SageIOError as err:
+                    if self._maybe_repair(err):
+                        continue
                     items = self._fail_touched(items, err)
                     union = self._refuse_union(items)
                 except Exception as err:

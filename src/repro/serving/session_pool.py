@@ -23,6 +23,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.errors import SageIOError
 from repro.core.store import SageReadSession, SageStore
 
 
@@ -42,6 +43,7 @@ class SessionPool:
         self.store = store if store is not None else SageStore(**store_kwargs)
         self._sessions: dict[tuple, SageReadSession] = {}
         self._lock = threading.Lock()
+        self.residency_score_errors = 0  # scoring failures, no longer silent
 
     # ------------------------------------------------------------- sessions
     def session(self, *, use_pallas: bool = False, interpret: bool = True) -> SageReadSession:
@@ -80,7 +82,12 @@ class SessionPool:
         """Cache-aware admission score for a serving request: the resident
         fraction of the blocks its NEXT unit of work touches (a stream
         scores its next chunk, not its whole range). Unresolvable requests
-        score 0.0 — admission ranking must never raise."""
+        score 0.0 — admission ranking must never raise for a request that
+        will fail with its own typed error at execution anyway, but only
+        the errors that legitimately mean "can't score this request" are
+        swallowed (storage failures, bad ranges); anything else is a real
+        bug and propagates. ``residency_score_errors`` counts the
+        swallowed ones so scoring failures stay visible."""
         req = request
         if not req.dataset or req.dataset not in self.store.names():
             return 0.0
@@ -89,7 +96,9 @@ class SessionPool:
             if req.kind == "isp":
                 ids = ids[: req.blocks_per_fetch]
             return self.store.resident_fraction(req.dataset, ids)
-        except Exception:
+        except (SageIOError, ValueError, IndexError, KeyError):
+            with self._lock:
+                self.residency_score_errors += 1
             return 0.0
 
     # -------------------------------------------------------- consumer glue
@@ -116,6 +125,7 @@ class SessionPool:
             "io": dict(self.store.io_stats),
             "prepared_keys": [list(k) for k in self.store.prepared_keys],
             "sessions": self.n_sessions,
+            "residency_score_errors": self.residency_score_errors,
         }
 
 

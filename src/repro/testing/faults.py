@@ -203,3 +203,39 @@ def corrupt_group(path, group: int, group_blocks: int, **kw) -> Callable[[], Non
     """Corrupt the first block of residency group ``group`` (as grouped by
     a ``SageStore(group_blocks=...)``); returns the undo callable."""
     return corrupt_extent(path, group * group_blocks, **kw)
+
+
+def corrupt_extents(
+    path, blocks, *, byte: int = 0, bit: int = 0
+) -> Callable[[], None]:
+    """Flip one payload bit in EACH of ``blocks`` — multi-extent damage in
+    one shot (the unrecoverable-beyond-parity scenario when the blocks
+    share a parity group). Returns a single undo restoring all of them."""
+    undos = [corrupt_extent(path, int(b), byte=byte, bit=bit) for b in blocks]
+
+    def undo() -> None:
+        for u in undos:
+            u()
+
+    return undo
+
+
+def corrupt_parity(
+    path, group: int, shard: int = 0, *, byte: int = 0, bit: int = 0
+) -> Callable[[], None]:
+    """Flip one bit inside parity shard ``shard`` of PARITY group ``group``
+    (container ``parity_group`` granularity, not store residency groups) of
+    a v2 parity container; returns the undo callable. Damaged parity must
+    be detected by scrub (and rebuilt from the data), never silently used
+    for a reconstruction."""
+    from repro.core.layout import SageContainerV2
+
+    c = SageContainerV2.open(path)
+    if c.parity is None:
+        raise ValueError(f"{path}: container has no parity section")
+    m = int(c.parity["shards"])
+    if not 0 <= shard < m:
+        raise ValueError(f"parity shard {shard} out of range (container has {m})")
+    p = int(group) * m + int(shard)
+    off = c._parity_start + p * c.stride_nbytes + byte
+    return flip_bit(path, off, bit)

@@ -4,8 +4,18 @@ Acceptance contract (ISSUE 7): with faults injected via
 ``repro.testing.faults``, every corruption on a checksummed container is
 DETECTED — zero silent wrong decodes across all 3 formats x vmap+pallas —
 transient EIO reads succeed via bounded retry, and a quarantined block
-group fails only the requests touching it while other tenants complete."""
+group fails only the requests touching it while other tenants complete.
 
+ISSUE 8 adds the self-healing half: on a parity container, single-extent
+damage is reconstructed and rewritten by the batcher's scrub-and-repair
+path — zero failed requests — while damage beyond the parity budget still
+quarantines with the typed error.
+
+Set ``SAGE_CHAOS_SHARDS=N`` (with ``XLA_FLAGS=--xla_force_host_platform_
+device_count>=N``) to run the whole suite over a mesh-backed store —
+chaos x sharding, the CI cross-product job."""
+
+import os
 import shutil
 
 import numpy as np
@@ -24,12 +34,15 @@ from repro.genomics.synth import make_reference, sample_read_set
 from repro.serving import Request, SageServer, SessionPool
 from repro.testing.faults import (
     FaultPlan,
+    corrupt_extents,
     corrupt_group,
     inject,
     truncate_file,
 )
 
 GROUP_BLOCKS = 2
+# chaos x sharding: >1 turns every store/pool in this module mesh-backed
+SHARDS = int(os.environ.get("SAGE_CHAOS_SHARDS", "1"))
 
 
 @pytest.fixture(scope="module")
@@ -55,6 +68,8 @@ def working_copy(chaos_ds, tmp_path):
 
 def fresh_store(path, **kw):
     kw.setdefault("group_blocks", GROUP_BLOCKS)
+    if SHARDS > 1:
+        kw.setdefault("shards", SHARDS)
     store = SageStore(**kw)
     store.register("ds", path)
     return store
@@ -174,6 +189,8 @@ def test_truncated_container_refused_at_open(chaos_ds, working_copy):
 
 # ------------------------------------------------- serving-level degradation
 def serve_pool(path, **kw):
+    if SHARDS > 1:
+        kw.setdefault("shards", SHARDS)
     pool = SessionPool(max_prepared=4, group_blocks=GROUP_BLOCKS, **kw)
     pool.store.register("ds", path)
     return pool
@@ -261,3 +278,115 @@ def test_retry_policy_bounds_are_configurable(working_copy):
         with inject(FaultPlan(eio_reads=frozenset({0}))):
             read_all(store)
     assert store.io_stats["read_retries"] == 0
+
+
+# --------------------------------------------------- self-healing (ISSUE 8)
+@pytest.fixture()
+def parity_copy(chaos_ds, tmp_path):
+    """The chaos dataset re-written WITH an xor parity section."""
+    sf, _, _ = chaos_ds
+    p = tmp_path / "ds_parity.sage2"
+    write_v2(sf, p, align=512, parity="xor", parity_group=4)
+    return str(p)
+
+
+def test_serving_survives_at_rest_damage_in_flight(chaos_ds, parity_copy):
+    """At-rest corruption on a parity container: the read path
+    reconstructs the damaged extent from parity IN FLIGHT — zero failed
+    requests, bit-identical output, nothing ever quarantined."""
+    _, clean_path, _ = chaos_ds
+    corrupt_group(parity_copy, 1, GROUP_BLOCKS, byte=9, bit=6)
+    srv = SageServer(serve_pool(parity_copy))
+    h = srv.read("ds", None)
+    srv.run_until_idle()
+    out = h.result()  # no raise: healed mid-read
+    want = read_all(fresh_store(clean_path))
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(out["data"]["tokens"])
+    )
+    assert srv.batcher.stats["isolated_failures"] == 0
+    io = srv.pool.store.io_stats
+    assert io["reconstructions"] >= 1 and io["reconstruction_failures"] == 0
+    assert srv.health("ds")["ok"]
+
+
+def test_batcher_repairs_quarantined_group_on_demand(chaos_ds, parity_copy):
+    """A quarantined-but-parity-repairable group (the scrubber's
+    auto_repair=False finding path): the batcher runs a targeted
+    store.repair, the DISK is rewritten, quarantine lifts after re-verify,
+    and the request completes — no clear_quarantine call anywhere."""
+    from repro.core.layout import SageContainerV2
+
+    _, clean_path, _ = chaos_ds
+    corrupt_group(parity_copy, 1, GROUP_BLOCKS, byte=9, bit=6)
+    srv = SageServer(serve_pool(parity_copy))
+    srv.pool.store.quarantine("ds", 1)  # scrub finding, repair deferred
+    h = srv.read("ds", None)
+    srv.run_until_idle()
+    out = h.result()  # no raise: repaired mid-round and retried
+    want = read_all(fresh_store(clean_path))
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(out["data"]["tokens"])
+    )
+    st = srv.batcher.stats
+    assert st["repair_attempts"] == 1 and st["auto_repairs"] == 1
+    assert st["isolated_failures"] == 0
+    assert srv.health("ds")["ok"]
+    # the medium itself was healed, not just the served bytes
+    fresh = SageContainerV2.open(parity_copy)
+    assert fresh.verify_blocks() == [] and fresh.verify_parity() == []
+
+
+def test_damage_beyond_parity_budget_still_quarantines(chaos_ds, tmp_path):
+    """Two erasures in one xor parity group exceed the budget: the read
+    raises the typed error naming the damage and the group quarantines —
+    detection never regresses when healing is impossible."""
+    sf, _, _ = chaos_ds
+    p = str(tmp_path / "p.sage2")
+    write_v2(sf, p, align=512, parity="xor", parity_group=4)
+    corrupt_extents(p, [0, 1], byte=9, bit=6)  # same parity group
+    store = fresh_store(p)
+    with pytest.raises(IntegrityError):
+        read_all(store)
+    assert not store.health("ds")["ok"]
+    assert 0 in store.health("ds")["quarantined_groups"]
+
+
+def test_partial_clear_quarantine_under_serving(chaos_ds, working_copy):
+    """Satellite: quarantine TWO groups, repair + clear only one — the
+    batcher serves the cleared group bit-identically while the other keeps
+    failing fast, and server health reflects each transition."""
+    _, clean_path, _ = chaos_ds
+    g = GROUP_BLOCKS
+    undo1 = corrupt_group(working_copy, 1, g, byte=9, bit=6)
+    corrupt_group(working_copy, 2, g, byte=7, bit=3)
+    srv = SageServer(serve_pool(working_copy))
+    h1, h2 = srv.read("ds", (g, 2 * g)), srv.read("ds", (2 * g, 3 * g))
+    srv.run_until_idle()
+    with pytest.raises(IntegrityError):
+        h1.result()
+    with pytest.raises(IntegrityError):
+        h2.result()
+    assert srv.health("ds")["quarantined_groups"] == (1, 2)
+    # no parity on this container: repair was attempted (once per group)
+    # but could not heal — degradation to fail-fast, not a repair loop
+    assert srv.batcher.stats["repair_attempts"] == 2
+    assert srv.batcher.stats["auto_repairs"] == 0
+    # out-of-band repair of group 1 only, then a PARTIAL clear
+    undo1()
+    srv.pool.store.clear_quarantine("ds", 1)
+    assert srv.health("ds") == {"ok": False, "quarantined_groups": (2,)}
+    ok = srv.read("ds", (g, 2 * g))
+    doomed = srv.read("ds", (2 * g, 3 * g))
+    srv.run_until_idle()
+    with pytest.raises(IntegrityError, match="quarantined") as ei:
+        doomed.result()
+    assert ei.value.block_group == 2
+    out = ok.result()
+    want = fresh_store(clean_path).session().read("ds", (g, 2 * g))
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(out["data"]["tokens"])
+    )
+    assert srv.health() == {"ds": {"ok": False, "quarantined_groups": (2,)}}
+    # the second round made no NEW repair attempts (once per group, ever)
+    assert srv.batcher.stats["repair_attempts"] == 2

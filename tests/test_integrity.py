@@ -86,11 +86,13 @@ def test_container_version_detail(dataset, tmp_path):
     assert container_version(path) == 2
     assert container_version(path, detail=True) == {
         "version": 2, "integrity": True, "checksums": True, "footer": True,
+        "parity": None, "parity_shards": 0,
     }
     legacy = tmp_path / "legacy.sage2"
     write_v2(sf, legacy, integrity=False)
     assert container_version(legacy, detail=True) == {
         "version": 2, "integrity": False, "checksums": False, "footer": False,
+        "parity": None, "parity_shards": 0,
     }
     v1 = tmp_path / "v1.sage.npz"
     sf.save(v1)

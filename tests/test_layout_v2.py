@@ -231,6 +231,25 @@ def test_cached_groups_own_their_bytes(v2_setup):
         assert nbytes == sum(v.nbytes for v in arrays.values())
 
 
+def test_quarantine_drop_releases_cached_bytes(v2_setup):
+    """Quarantining a group purges its host-cache entry: ``cache_bytes``
+    decrements and ``cache_drops`` counts the purge — quarantined bytes
+    must not keep occupying the budget (or worse, serve a later read)."""
+    _, path, _, _ = v2_setup
+    store = lazy_store(path, group_blocks=2)
+    sess = store.session()
+    sess.read("ds", (0, 4))  # two cached groups
+    io = store.io_stats
+    before, drops = io["cache_bytes"], io["cache_drops"]
+    assert before > 0
+    store.quarantine("ds", 1)
+    io = store.io_stats
+    assert io["cache_drops"] == drops + 1
+    assert 0 < io["cache_bytes"] < before  # group 1's bytes released
+    store.clear_quarantine("ds", 1)
+    sess.read("ds", (0, 2))  # untouched group 0 still serves from cache
+
+
 def test_v1_path_survives_deletion_after_load(tmp_path):
     """A v1 path is touched exactly once: after the whole-file load, reads
     keep serving from the cache even if the file disappears (the sniff

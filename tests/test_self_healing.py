@@ -1,0 +1,445 @@
+"""Self-healing SAGe store (ISSUE 8): parity, reconstruction, scrub, repair.
+
+Acceptance contract: a parity container is bit-identical to its plain
+sibling on the clean path (all 3 formats x both decode paths) and
+pre-parity containers stay readable unchanged; single-extent at-rest
+damage is reconstructed IN FLIGHT from parity and repaired durably by
+``store.repair``/the scrubber; damage beyond the parity budget still
+raises the typed error and quarantines; the migrate CLI grows
+``--add-parity``/``--repair``.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import SageStore, Scrubber
+from repro.core.encoder import SageEncoder
+from repro.core.errors import IntegrityError
+from repro.core.layout import SageContainerV2, container_version, write_v2
+from repro.core.parity import (
+    GF_EXP,
+    encode_parity,
+    gf_mul_row,
+    n_shards,
+    parity_coeff,
+    recover_erasures,
+)
+from repro.genomics.synth import make_reference, sample_read_set
+from repro.testing.faults import corrupt_extent, corrupt_extents, corrupt_parity
+
+GB = 2  # store residency group size (!= the container's parity_group)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    ref = make_reference(20_000, seed=80)
+    rs = sample_read_set(ref, "illumina", depth=3, seed=81)
+    return SageEncoder(ref, token_target=2048).encode(rs)
+
+
+@pytest.fixture(scope="module")
+def plain_path(ds, tmp_path_factory):
+    p = tmp_path_factory.mktemp("heal") / "plain.sage2"
+    write_v2(ds, p, align=512)
+    return str(p)
+
+
+@pytest.fixture()
+def parity_path(ds, tmp_path):
+    p = tmp_path / "parity.sage2"
+    write_v2(ds, p, align=512, parity="xor", parity_group=4)
+    return str(p)
+
+
+@pytest.fixture()
+def rs_path(ds, tmp_path):
+    p = tmp_path / "rs.sage2"
+    write_v2(ds, p, align=512, parity="rs", parity_group=4, parity_shards=2)
+    return str(p)
+
+
+def store_over(path, **kw):
+    kw.setdefault("group_blocks", GB)
+    store = SageStore(**kw)
+    store.register("ds", path)
+    return store
+
+
+# ------------------------------------------------------------ GF(256) maths
+def test_xor_scheme_is_single_shard_gf_identity():
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, size=(5, 64), dtype=np.uint8)
+    enc = encode_parity(data, 1)
+    assert enc.shape == (1, 64)
+    want = np.zeros(64, np.uint8)
+    for row in data:
+        want ^= row
+    np.testing.assert_array_equal(enc[0], want)
+    assert parity_coeff(0, 3) == 1  # shard 0 is plain XOR: all coeffs 1
+
+
+def test_recover_every_single_and_double_erasure():
+    rng = np.random.default_rng(1)
+    k, m, L = 5, 2, 48
+    data = rng.integers(0, 256, size=(k, L), dtype=np.uint8)
+    parity = {j: enc for j, enc in enumerate(encode_parity(data, m))}
+    for a in range(k):
+        for b in range(a + 1, k):
+            known = {i: data[i] for i in range(k) if i not in (a, b)}
+            got = recover_erasures(known, [a, b], parity, L)
+            np.testing.assert_array_equal(got[a], data[a])
+            np.testing.assert_array_equal(got[b], data[b])
+    # single erasure with only one intact shard also recovers
+    got = recover_erasures(
+        {i: data[i] for i in range(1, k)}, [0], {1: parity[1]}, L
+    )
+    np.testing.assert_array_equal(got[0], data[0])
+
+
+def test_erasures_beyond_intact_parity_raise():
+    data = np.arange(4 * 16, dtype=np.uint8).reshape(4, 16)
+    parity = {0: encode_parity(data, 1)[0]}
+    with pytest.raises(ValueError, match="erasure"):
+        recover_erasures({2: data[2], 3: data[3]}, [0, 1], parity, 16)
+
+
+def test_parity_parameter_validation():
+    assert n_shards("xor", 7) == 1  # xor ignores the shard count
+    assert n_shards("rs", 3) == 3
+    with pytest.raises(ValueError):
+        n_shards("raid7", 1)
+    with pytest.raises(ValueError):
+        n_shards("rs", 0)
+    with pytest.raises(ValueError):
+        encode_parity(np.zeros((256, 4), np.uint8), 1)  # k > MAX_GROUP
+    assert GF_EXP[255] == GF_EXP[0]  # the exp table wraps at 255
+    row = np.array([0, 1, 7, 255], np.uint8)
+    np.testing.assert_array_equal(gf_mul_row(row, 1), row)
+    np.testing.assert_array_equal(gf_mul_row(row, 0), np.zeros(4, np.uint8))
+
+
+# ------------------------------------------------- clean-path bit identity
+@pytest.mark.parametrize("fmt", ["2bit", "onehot", "kmer"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_parity_container_clean_path_bit_identical(
+    ds, plain_path, parity_path, rs_path, fmt, use_pallas
+):
+    """The parity section is invisible on the clean read path: xor and rs
+    containers decode bit-identically to the plain sibling for every
+    format on both decode paths."""
+    want = store_over(plain_path).session(use_pallas=use_pallas).read(
+        "ds", None, fmt=fmt, kmer_k=4
+    )
+    for p in (parity_path, rs_path):
+        got = store_over(p).session(use_pallas=use_pallas).read(
+            "ds", None, fmt=fmt, kmer_k=4
+        )
+        np.testing.assert_array_equal(
+            np.asarray(want["tokens"]), np.asarray(got["tokens"])
+        )
+
+
+def test_parity_sections_equal_plain_sections(ds, plain_path, parity_path):
+    assert SageContainerV2.open(parity_path).to_sage_file().diff(ds) == []
+    assert SageContainerV2.open(plain_path).to_sage_file().diff(
+        SageContainerV2.open(parity_path).to_sage_file()
+    ) == []
+
+
+def test_container_version_reports_parity(plain_path, parity_path, rs_path):
+    assert container_version(parity_path) == 2  # magic unchanged
+    for path, scheme, m in (
+        (plain_path, None, 0), (parity_path, "xor", 1), (rs_path, "rs", 2),
+    ):
+        d = container_version(path, detail=True)
+        assert d["version"] == 2 and d["integrity"]
+        assert d["parity"] == scheme and d["parity_shards"] == m
+
+
+def test_parity_requires_integrity_layout(ds, tmp_path):
+    with pytest.raises(ValueError, match="integrity"):
+        write_v2(ds, tmp_path / "x.sage2", integrity=False, parity="xor")
+    with pytest.raises(ValueError, match="scheme"):
+        write_v2(ds, tmp_path / "y.sage2", parity="raid0")
+
+
+# -------------------------------------------------- in-flight reconstruction
+def test_inflight_reconstruction_serves_bit_identical(plain_path, parity_path):
+    undo = corrupt_extent(parity_path, 1, byte=7, bit=5)
+    store = store_over(parity_path)
+    got = store.session().read("ds", None)
+    want = store_over(plain_path).session().read("ds", None)
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(got["tokens"])
+    )
+    io = store.io_stats
+    assert io["reconstructions"] >= 1 and io["parity_reads"] >= 1
+    assert io["reconstruction_failures"] == 0
+    assert store.health("ds")["ok"]  # healed in flight, never quarantined
+    # the MEDIUM is still damaged: in-flight healing serves, repair rewrites
+    assert SageContainerV2.open(parity_path).verify_blocks() == [1]
+    undo()
+
+
+def test_rs_container_survives_double_erasure(plain_path, rs_path):
+    corrupt_extents(rs_path, [4, 6], byte=3, bit=1)  # both in parity group 1
+    store = store_over(rs_path)
+    got = store.session().read("ds", None)
+    want = store_over(plain_path).session().read("ds", None)
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(got["tokens"])
+    )
+    assert store.io_stats["reconstructions"] >= 2
+
+
+def test_damage_beyond_parity_budget_raises_typed(parity_path):
+    corrupt_extents(parity_path, [0, 2], byte=3, bit=1)  # xor: 1-shard budget
+    store = store_over(parity_path)
+    with pytest.raises(IntegrityError) as ei:
+        store.session().read("ds", None)
+    assert set(ei.value.blocks or ()) >= {0, 2}
+    assert store.io_stats["reconstruction_failures"] >= 1
+    assert not store.health("ds")["ok"]
+
+
+def test_damaged_parity_is_never_used_for_reconstruction(parity_path):
+    """Data AND the group's only parity shard damaged: reconstruction must
+    refuse (the shard fails ITS checksum) rather than decode garbage."""
+    corrupt_extent(parity_path, 1, byte=2, bit=4)
+    corrupt_parity(parity_path, group=0, shard=0, byte=5, bit=3)
+    store = store_over(parity_path)
+    with pytest.raises(IntegrityError):
+        store.session().read("ds", None)
+    assert store.io_stats["reconstruction_failures"] >= 1
+
+
+# ------------------------------------------------------- durable repair
+def test_scan_rebuild_rewrite_parity_shard(parity_path):
+    undo = corrupt_parity(parity_path, group=1, shard=0, byte=9, bit=6)
+    c = SageContainerV2.open(parity_path)
+    assert c.verify_blocks() == []  # data is fine
+    bad = c.verify_parity()
+    assert bad == [1]  # group 1, shard 0 -> flat index 1*1+0
+    fixed = c.rebuild_parity(bad)
+    c.rewrite_extents({}, fixed)
+    fresh = SageContainerV2.open(parity_path)
+    assert fresh.verify_parity() == []
+    undo()  # undoing AFTER the rewrite re-flips the (now correct) byte
+    assert SageContainerV2.open(parity_path).verify_parity() == [1]
+
+
+def test_rewrite_refuses_bytes_not_matching_stored_crc(parity_path):
+    c = SageContainerV2.open(parity_path)
+    L = c.layout.payload_nbytes
+    with pytest.raises(IntegrityError, match="stored CRC"):
+        c.rewrite_extents({0: np.full(L, 0xAB, np.uint8)})
+
+
+def test_store_repair_full_sweep_heals_the_medium(plain_path, parity_path):
+    corrupt_extent(parity_path, 3, byte=11, bit=2)
+    store = store_over(parity_path)
+    summary = store.repair("ds")  # nothing quarantined -> full scan
+    assert summary["damaged_blocks"] == [3]
+    assert summary["repaired_blocks"] == [3]
+    assert summary["scanned_blocks"] == store.n_blocks("ds")
+    fresh = SageContainerV2.open(parity_path)
+    assert fresh.verify_blocks() == [] and fresh.verify_parity() == []
+    got = store.session().read("ds", None)
+    want = store_over(plain_path).session().read("ds", None)
+    np.testing.assert_array_equal(
+        np.asarray(want["tokens"]), np.asarray(got["tokens"])
+    )
+
+
+def test_store_repair_lifts_quarantine_only_after_reverify(parity_path):
+    corrupt_extent(parity_path, 2, byte=4, bit=7)
+    store = store_over(parity_path)
+    store.quarantine("ds", 1)  # block 2 // GB -> store group 1
+    with pytest.raises(IntegrityError, match="quarantined"):
+        store.session().read("ds", (2, 3))
+    summary = store.repair("ds")  # scope = the quarantined set
+    assert summary["lifted_groups"] == [1]
+    assert store.health("ds")["ok"]
+    store.session().read("ds", (2, 3))  # serves again, no clear_quarantine
+
+
+def test_store_repair_validation(plain_path, ds):
+    store = store_over(plain_path)
+    with pytest.raises(ValueError, match="not registered"):
+        store.repair("nope")
+    with pytest.raises(ValueError, match="out of range"):
+        store.repair("ds", group=999)
+    eager = SageStore()
+    eager.register("mem", ds)
+    with pytest.raises(ValueError, match="v2"):
+        eager.repair("mem")
+
+
+def test_store_repair_without_parity_quarantines_and_raises(plain_path, tmp_path):
+    import shutil
+
+    p = str(tmp_path / "copy.sage2")
+    shutil.copy(plain_path, p)
+    corrupt_extent(p, 0, byte=6, bit=1)
+    store = store_over(p)
+    with pytest.raises(IntegrityError, match="no parity"):
+        store.repair("ds", group=0)
+    assert store.health("ds")["quarantined_groups"] == (0,)
+
+
+# ------------------------------------------------------------- the scrubber
+def test_scrub_clean_sweep_reports_in_health(parity_path):
+    store = store_over(parity_path)
+    scrub = Scrubber(store, chunk_blocks=4)
+    r = scrub.run_once()
+    assert r["complete"] and r["findings"] == []
+    assert r["blocks_scanned"] == store.n_blocks("ds")
+    h = store.health("ds")
+    assert h["ok"] and h["scrub"]["sweeps_completed"] == 1
+    assert h["scrub"]["findings"] == []
+    assert store.health()["ds"]["scrub"]["n_blocks"] == store.n_blocks("ds")
+
+
+def test_scrub_finds_and_repairs_damage(parity_path):
+    corrupt_extent(parity_path, 5, byte=8, bit=3)
+    store = store_over(parity_path)
+    scrub = Scrubber(store, chunk_blocks=4)
+    r = scrub.run_once()
+    assert r["complete"]
+    assert [f["action"] for f in r["findings"]] == ["repaired"]
+    assert r["findings"][0]["blocks"] == (5,)
+    fresh = SageContainerV2.open(parity_path)
+    assert fresh.verify_blocks() == []
+    assert store.health("ds")["ok"]
+    assert store.health("ds")["scrub"]["findings"] == r["findings"]
+
+
+def test_scrub_auto_repair_off_quarantines_for_later(parity_path):
+    corrupt_extent(parity_path, 5, byte=8, bit=3)
+    store = store_over(parity_path)
+    scrub = Scrubber(store, auto_repair=False)
+    r = scrub.run_once()
+    assert [f["action"] for f in r["findings"]] == ["found"]
+    assert store.health("ds")["quarantined_groups"] == (2,)  # 5 // GB
+    # deferred repair (the batcher's on-demand path) heals and lifts
+    store.repair("ds", group=2)
+    assert store.health("ds")["ok"]
+    assert SageContainerV2.open(parity_path).verify_blocks() == []
+
+
+def test_scrub_unrecoverable_damage_quarantines(parity_path):
+    corrupt_extents(parity_path, [0, 2], byte=8, bit=3)  # > xor budget
+    store = store_over(parity_path)
+    scrub = Scrubber(store)
+    r = scrub.run_once()
+    acts = {f["action"] for f in r["findings"]}
+    assert acts == {"quarantined"}
+    assert not store.health("ds")["ok"]
+    assert 0 in store.health("ds")["quarantined_groups"]
+
+
+def test_damage_landing_mid_sweep_is_caught_next_chunk(parity_path):
+    """Corruption that lands AHEAD of the cursor during a sweep is found
+    by the same pass; the cursor survives the partial run."""
+    store = store_over(parity_path)
+    scrub = Scrubber(store, chunk_blocks=2)
+    r = scrub.run_once(max_blocks=2)  # partial pass: cursor at block 2
+    assert not r["complete"] and store.health("ds")["scrub"]["cursor"] == 2
+    corrupt_extent(parity_path, 6, byte=8, bit=3)  # ahead of the cursor
+    r2 = scrub.run_once()  # resumes at 2, reaches the damage
+    assert r2["complete"]
+    assert [f["action"] for f in r2["findings"]] == ["repaired"]
+    assert SageContainerV2.open(parity_path).verify_blocks() == []
+
+
+def test_scrub_rate_limit_bounds_bandwidth(parity_path):
+    store = store_over(parity_path)
+    nbytes = store.n_blocks("ds") * SageContainerV2.open(parity_path).stride_nbytes
+    rate = nbytes / 0.2  # a full sweep must take >= ~0.2s
+    scrub = Scrubber(store, rate_bps=rate, chunk_blocks=2)
+    r = scrub.run_once()
+    assert r["complete"]
+    assert r["elapsed_s"] >= 0.9 * (r["bytes_scanned"] / rate)
+    assert r["effective_bps"] <= 1.2 * rate
+
+
+def test_scrub_background_thread_pause_resume_stop(parity_path):
+    import time
+
+    store = store_over(parity_path)
+    scrub = Scrubber(store, interval_s=0.01)
+    scrub.start()
+    with pytest.raises(RuntimeError, match="already running"):
+        scrub.start()
+    deadline = time.monotonic() + 10
+    while scrub.status()["sweeps_completed"] < 2:
+        assert time.monotonic() < deadline, "background sweeps never ran"
+        time.sleep(0.01)
+    scrub.pause()
+    assert scrub.paused
+    scrub.resume()
+    assert not scrub.paused
+    scrub.stop(join=True)
+    assert not scrub.running
+    scrub.stop()  # idempotent
+    st = scrub.status()
+    assert st["sweeps_completed"] >= 2 and st["sweep_errors"] == 0
+    assert st["blocks_scanned"] >= 2 * store.n_blocks("ds")
+
+
+def test_scrub_parameter_validation(parity_path):
+    store = store_over(parity_path)
+    with pytest.raises(ValueError):
+        Scrubber(store, rate_bps=0)
+    with pytest.raises(ValueError):
+        Scrubber(store, chunk_blocks=0)
+    with pytest.raises(ValueError):
+        Scrubber(store, interval_s=-1)
+
+
+# ------------------------------------------------------------- migrate CLI
+def migrate(*args):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "tools/migrate_container.py", *args],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+
+
+def test_migrate_add_parity_then_repair_in_place(plain_path, tmp_path):
+    prot = str(tmp_path / "prot.sage2")
+    r = migrate(plain_path, prot, "--add-parity", "rs",
+                "--parity-group", "4", "--parity-shards", "2", "--verify")
+    assert r.returncode == 0, r.stderr
+    assert "parity rs x2/4" in r.stdout and "bit-identical" in r.stdout
+    d = container_version(prot, detail=True)
+    assert d["parity"] == "rs" and d["parity_shards"] == 2
+    # clean container: --repair is a no-op that says so
+    r = migrate(prot, "--repair")
+    assert r.returncode == 0 and "nothing to repair" in r.stdout
+    # two damaged extents in one group: within the rs budget, healed
+    corrupt_extents(prot, [0, 2], byte=5, bit=4)
+    r = migrate(prot, "--repair")
+    assert r.returncode == 0, r.stderr
+    assert "repaired and re-verified clean" in r.stdout
+    fresh = SageContainerV2.open(prot)
+    assert fresh.verify_blocks() == [] and fresh.verify_parity() == []
+    # three damaged extents: beyond the budget, non-zero exit
+    corrupt_extents(prot, [0, 1, 2], byte=5, bit=4)
+    r = migrate(prot, "--repair")
+    assert r.returncode == 1 and "REPAIR FAILED" in r.stderr
+
+
+def test_migrate_repair_rejects_bad_flag_combos(plain_path, tmp_path):
+    r = migrate(plain_path, str(tmp_path / "x"), "--repair")
+    assert r.returncode != 0 and "in place" in r.stderr
+    r = migrate(plain_path, str(tmp_path / "x.sage2"),
+                "--add-parity", "--to-v1")
+    assert r.returncode != 0
+    r = migrate(plain_path)  # dst required without --repair
+    assert r.returncode != 0

@@ -312,3 +312,22 @@ def test_cache_stats_reset(pool):
         "per_dataset": {}, "total": {"hits": 0, "misses": 0, "evictions": 0}
     }
     assert pool.store.cache_stats("ds") == {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def test_residency_scoring_errors_counted_not_swallowed_silently(pool):
+    """Admission scoring never raises, but scoring failures are no longer
+    invisible: unresolvable ranges score 0.0 AND bump the counter, while
+    an unregistered dataset is a defined 0.0 (no error involved)."""
+    from repro.serving import Request
+
+    before = pool.residency_score_errors
+    assert pool.request_residency(Request(kind="read", dataset="nope")) == 0.0
+    assert pool.residency_score_errors == before
+    bad = Request(kind="read", dataset="ds", block_range=(0, 10_000))
+    assert pool.request_residency(bad) == 0.0
+    assert pool.residency_score_errors == before + 1
+    assert pool.stats()["residency_score_errors"] == before + 1
+    # a well-formed request still scores without touching the counter
+    ok = Request(kind="read", dataset="ds", block_range=(0, 1))
+    assert 0.0 <= pool.request_residency(ok) <= 1.0
+    assert pool.residency_score_errors == before + 1

@@ -232,3 +232,13 @@ def test_filter_store_blocks_driver(small_store):
             p = int(out["read_pos"][i][r])
             np.testing.assert_array_equal(out["tokens"][i][s : s + l], ref[p : p + l])
     assert pruned > 0
+
+
+def test_health_unregistered_dataset_raises(small_store):
+    """A typo'd monitoring probe must not read as a clean bill of health:
+    health() on an unknown name raises a ValueError naming it."""
+    store, _, _ = small_store
+    with pytest.raises(ValueError, match="'nope' is not registered"):
+        store.health("nope")
+    assert store.health("ds")["ok"]  # the registered name still answers
+    assert set(store.health()) == set(store.names())

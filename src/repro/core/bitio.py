@@ -21,7 +21,24 @@ __all__ = [
     "pack_2bit",
     "unpack_2bit",
     "unpack_2bit_batch",
+    "zigzag_encode",
+    "zigzag_decode",
 ]
+
+
+def zigzag_encode(values: np.ndarray) -> np.ndarray:
+    """Map signed int64 onto uint64 so small-magnitude values get small
+    codes: 0,-1,1,-2,2,... -> 0,1,2,3,4,... (the delta-coding companion of
+    :func:`pack_bits`; used by the v2 container's binary table encoding)."""
+    v = np.asarray(values, dtype=np.int64)
+    # two's-complement wrap via astype keeps the math overflow-free
+    return (v.astype(np.uint64) << np.uint64(1)) ^ (v >> np.int64(63)).astype(np.uint64)
+
+
+def zigzag_decode(codes: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`zigzag_encode` (uint64 codes -> int64 values)."""
+    u = np.asarray(codes, dtype=np.uint64)
+    return ((u >> np.uint64(1)) ^ (np.uint64(0) - (u & np.uint64(1)))).astype(np.int64)
 
 
 def ranges_from_counts(counts: np.ndarray) -> np.ndarray:

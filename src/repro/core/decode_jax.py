@@ -473,6 +473,81 @@ def decode_file_jax(db: DeviceBlocks) -> dict[str, jax.Array]:
 
 
 # --------------------------------------------------------------------------
+# codec unpack (PR 9): stored compressed extents -> block-major stream rows
+# --------------------------------------------------------------------------
+# The inverse of repro.core.codec.encode_blocks, on device: pure shift/mask/
+# gather work (descriptor parse, truncated-prefix gather, nibble-dictionary
+# expansion) — no general-purpose inflate anywhere near the hot path. The
+# static key is (widths, cap_words) via array shapes, both container-level
+# constants, so a container unpacks under ONE jit signature (zero steady-
+# state retraces, same contract as the decode entry points).
+
+@functools.partial(jax.jit, static_argnames=("widths",))
+def _unpack_rows_jit(packed, dicts, widths):
+    from repro.core.codec import DESC_WORDS, ESCAPE, MODE_NIBBLE, USED_MASK
+
+    TRACE_COUNTS["unpack_rows"] += 1
+    n, cap = packed.shape
+    packed = packed.astype(jnp.uint32)
+    ns = len(widths)
+    desc = packed[:, :ns].astype(jnp.int32)
+    used = desc & jnp.int32(USED_MASK)
+    modes = (desc >> 20) & 3
+    nesc = packed[:, ns:DESC_WORDS].astype(jnp.int32)
+    sec = jnp.where(modes == MODE_NIBBLE, (used + 1) // 2 + (nesc + 3) // 4, used)
+    sec_off = DESC_WORDS + jnp.concatenate(
+        [jnp.zeros((n, 1), jnp.int32), jnp.cumsum(sec, axis=1)[:, :-1]], axis=1
+    )
+    row = jnp.arange(n, dtype=jnp.int32)[:, None]
+    out: dict[str, jax.Array] = {}
+    for si, (s, w) in enumerate(widths):
+        u = used[:, si][:, None]
+        off = sec_off[:, si][:, None]
+        kw = jnp.arange(w, dtype=jnp.int32)[None, :]
+        raw = jnp.where(
+            kw < u, packed[row, jnp.clip(off + kw, 0, cap - 1)], jnp.uint32(0)
+        )
+        kb = jnp.arange(4 * w, dtype=jnp.int32)[None, :]
+        nib = (
+            packed[row, jnp.clip(off + kb // 8, 0, cap - 1)]
+            >> (4 * (kb % 8)).astype(jnp.uint32)
+        ) & 15
+        in_use = kb < 4 * u
+        is_esc = (nib == ESCAPE) & in_use
+        rank = jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - is_esc
+        eoff = off + (u + 1) // 2
+        escb = (
+            packed[row, jnp.clip(eoff + rank // 4, 0, cap - 1)]
+            >> (8 * (rank % 4)).astype(jnp.uint32)
+        ) & 255
+        byte = jnp.where(is_esc, escb, dicts[si][nib]).astype(jnp.uint32)
+        byte = jnp.where(in_use, byte, jnp.uint32(0))
+        shifts = (8 * jnp.arange(4, dtype=jnp.uint32))[None, None, :]
+        nib_rows = (byte.reshape(n, w, 4) << shifts).sum(axis=2, dtype=jnp.uint32)
+        out[s] = jnp.where(
+            (modes[:, si] == MODE_NIBBLE)[:, None], nib_rows, raw
+        ).astype(jnp.uint32)
+    return out
+
+
+def unpack_block_rows(packed, dicts, widths) -> dict[str, jax.Array]:
+    """Jitted device unpack of codec extent payloads.
+
+    ``packed`` is (n, cap_words) uint32 (zero-padded rows straight from
+    :meth:`repro.core.layout.SageContainerV2.gather_packed`), ``dicts`` the
+    container's (N_STREAMS, 16) nibble dictionaries, ``widths`` the
+    decoded row-width mapping (``cons`` entries are ignored — consensus
+    windows travel by reference, not through the codec). Returns
+    stream -> (n, W_s) uint32 rows, bit-identical to
+    :func:`repro.core.codec.decode_blocks`."""
+    wmap = dict(widths)
+    wt = tuple((s, int(wmap[s])) for s in STREAMS)
+    return _unpack_rows_jit(
+        jnp.asarray(packed), jnp.asarray(dicts, dtype=jnp.uint8), wt
+    )
+
+
+# --------------------------------------------------------------------------
 # shape-bucketed ranged decode (the compile-once serving hot path)
 # --------------------------------------------------------------------------
 # A jitted decoder specializes on the leading block dimension, so serving

@@ -74,12 +74,14 @@ import json
 import os
 import shutil
 import time
+import zlib
 from collections import OrderedDict
 from pathlib import Path
 from typing import Optional
 
 import numpy as np
 
+from repro.core import codec as sagecodec
 from repro.core.decode_jax import (
     block_row_widths,
     localize_directory,
@@ -104,7 +106,8 @@ from repro.core.parity import (
 MAGIC = b"SAGE2EXT"
 FOOTER_MAGIC = b"SAGE2FIN"
 FOOTER_NBYTES = 24  # magic(8) + body_nbytes u64 + header_crc u32 + self_crc u32
-DEFAULT_ALIGN = 4096  # NAND-page-sized extent alignment
+DEFAULT_ALIGN = 4096  # NAND-page-sized extent alignment (legacy raw extents)
+CODEC_ALIGN = 64  # default slot alignment for compressed (codec) extents
 _FIXED = len(MAGIC) + 8  # magic + uint64 json length
 
 #: column order of the per-block extent payload (uint32 words)
@@ -217,6 +220,9 @@ def new_io_stats() -> dict[str, int]:
         "checksum_retries": 0,  # mismatch -> one re-read attempts
         "checksum_failures": 0,  # mismatches that survived the re-read
         "blocks_verified": 0,  # extent payloads whose CRC was checked
+        # per-extent codec (PR 9): stored (compressed) vs decoded bytes
+        "extent_bytes_stored": 0,  # compressed payload bytes of gathered blocks
+        "extent_bytes_decoded": 0,  # block-major decoder bytes produced
         # self-healing (PR 8)
         "parity_reads": 0,  # parity shard reads issued
         "parity_bytes_read": 0,
@@ -233,12 +239,13 @@ def write_v2(
     sf: SageFile,
     path: str | Path,
     *,
-    align: int = DEFAULT_ALIGN,
+    align: Optional[int] = None,
     chunk_blocks: int = 1024,
     integrity: bool = True,
     parity: Optional[str] = None,
     parity_group: int = 16,
     parity_shards: int = 2,
+    codec: bool = True,
 ) -> dict:
     """Serialize ``sf`` as a v2 block-extent container; returns size stats.
 
@@ -250,20 +257,38 @@ def write_v2(
     fsynced, and only then renamed over ``path`` — a crashed writer leaves
     the previous container (or nothing) intact, never a half-valid file.
 
+    ``codec=True`` (default, PR 9) stores every extent COMPRESSED with the
+    per-extent codec of :mod:`repro.core.codec` (word truncation + nibble
+    dictionaries), drops the consensus-window copy from each extent
+    (windows are ranged-read from the shared consensus section against
+    per-window CRCs), encodes the directory/extent tables as compact
+    binary delta streams instead of raw int64 sections, packs extents into
+    payload-sized slots at a small alignment (:data:`CODEC_ALIGN` unless
+    ``align`` is given), and — when parity is off — dedups bit-identical
+    payloads into shared extents. ``codec=False`` writes the legacy raw
+    stride-aligned layout bit-identically to pre-PR-9 output.
+
     ``integrity=True`` (default) adds the checksum layer: a CRC32C per
     extent payload (the checksum section after the extent table), CRCs of
     the directory/extent-table/consensus in the header json, and the
     end-of-file commit footer binding a CRC of the whole header region.
-    ``integrity=False`` writes the legacy (pre-checksum) layout — kept for
+    CRCs always cover the STORED (compressed) bytes — readers verify, then
+    decode. ``integrity=False`` writes a checksum-free layout — kept for
     compatibility tests and for readers that predate the format.
 
     ``parity`` (opt-in) appends the self-healing section: ``"xor"`` adds
     one parity shard per ``parity_group`` adjacent extents, ``"rs"`` adds
     ``parity_shards`` GF(256) shards (tolerating that many damaged extents
     per group). Parity requires the integrity layer — the shards are only
-    usable when corruption is detectable."""
+    usable when corruption is detectable. With the codec, parity is
+    computed over the stored compressed bytes (each group's members
+    zero-padded to the group's longest payload), so reconstruction and
+    :meth:`SageContainerV2.rewrite_extents` work unchanged."""
+    if align is None:
+        align = CODEC_ALIGN if codec else DEFAULT_ALIGN
     if align < 4 or align % 4:
         raise ValueError(f"align must be a positive multiple of 4, got {align}")
+    m_par = 0
     if parity is not None:
         if not integrity:
             raise ValueError(
@@ -277,7 +302,28 @@ def write_v2(
         m_par = n_shards(parity, parity_shards)  # validates the scheme too
         # parity groups must never straddle a write chunk
         chunk_blocks = align_up(max(chunk_blocks, parity_group), parity_group)
-    path = Path(path)
+    writer = _write_v2_codec if codec else _write_v2_legacy
+    return writer(
+        sf, Path(path), align=align, chunk_blocks=chunk_blocks,
+        integrity=integrity, parity=parity, parity_group=parity_group,
+        m_par=m_par,
+    )
+
+
+def _write_v2_legacy(
+    sf: SageFile,
+    path: Path,
+    *,
+    align: int,
+    chunk_blocks: int,
+    integrity: bool,
+    parity: Optional[str],
+    parity_group: int,
+    m_par: int,
+) -> dict:
+    """The raw (uncompressed) stride-aligned extent layout — bit-identical
+    to pre-codec ``write_v2`` output, kept for old readers and as the
+    bit-identity baseline in tests."""
     layout = ExtentLayout.from_meta(sf.meta, align)
     nb = sf.meta.n_blocks
     stride = layout.stride_nbytes
@@ -420,18 +466,319 @@ def write_v2(
         "payload_nbytes": layout.payload_nbytes,
         "stride_nbytes": stride,
         "header_nbytes": header_nbytes,
+        "header_json_nbytes": len(hjson),
+        "dir_enc_nbytes": nb * NDIR * 8,
+        "ext_enc_nbytes": nb * 2 * 8,
         "cons_nbytes": int(cons.nbytes),
         "data_start": data_start,
         "file_nbytes": file_nbytes,
         "align": align,
         "integrity": integrity,
         "checksum_nbytes": crc_nbytes,
+        "cons_win_crc_nbytes": 0,
         "footer_nbytes": FOOTER_NBYTES if integrity else 0,
         "parity": parity,
         "parity_group": parity_group if parity is not None else 0,
         "parity_shards": m_par if parity is not None else 0,
         "parity_nbytes": n_par * stride,
         "parity_overhead": (n_par * stride / (nb * stride)) if nb and parity else 0.0,
+        "codec": False,
+        "codec_version": 0,
+        "stored_payload_nbytes": nb * layout.payload_nbytes,
+        "dedup_blocks": 0,
+    }
+
+
+def _cons_window_rows(cons: np.ndarray, w0, width: int) -> np.ndarray:
+    """(n, width) uint32 consensus windows at word offsets ``w0``, zero-
+    filled past the section end — the exact gather semantics of
+    :func:`repro.core.decode_jax.prepare_block_arrays`, so writer-side
+    window CRCs and reader-side window gathers agree bit-for-bit."""
+    w0 = np.asarray(w0, dtype=np.int64)
+    if cons.size == 0:
+        return np.zeros((w0.size, width), dtype=np.uint32)
+    idx = w0[:, None] + np.arange(width, dtype=np.int64)[None, :]
+    valid = (idx >= 0) & (idx < cons.size)
+    return np.where(
+        valid, cons[np.clip(idx, 0, cons.size - 1)], np.uint32(0)
+    ).astype(np.uint32)
+
+
+def _write_v2_codec(
+    sf: SageFile,
+    path: Path,
+    *,
+    align: int,
+    chunk_blocks: int,
+    integrity: bool,
+    parity: Optional[str],
+    parity_group: int,
+    m_par: int,
+) -> dict:
+    """Compressed-extent v2 writer (PR 9) — payload format in
+    :mod:`repro.core.codec`. Same atomic-commit and bounded-memory
+    contract as the legacy writer, but TWO chunked encode passes: pass 1
+    computes every stored payload's size, CRC, and dedup identity (so
+    extent offsets are final before any data byte lands); pass 2 re-encodes
+    and writes the unique payloads plus parity over the stored bytes."""
+    layout = ExtentLayout.from_meta(sf.meta, align)
+    nb = sf.meta.n_blocks
+    cons = np.ascontiguousarray(sf.consensus2b, dtype=np.uint32)
+    directory = np.ascontiguousarray(sf.directory, dtype=np.int64)
+    widths = dict(layout.widths)
+    dicts = sagecodec.build_stream_dicts(sf.streams)
+    luts = sagecodec.nibble_luts(dicts)
+    used = sagecodec.used_words(directory, sf.meta.stream_bits, widths)
+    n_groups = -(-nb // parity_group) if parity is not None else 0
+    n_par = n_groups * m_par
+    # dedup'd (shared) extents would alias members of different parity
+    # groups, so content dedup is only applied when parity is off
+    dedup = parity is None
+
+    def encode_chunk(lo: int, hi: int):
+        ids = np.arange(lo, hi, dtype=np.int64)
+        rows = prepare_block_arrays(sf, ids)
+        return sagecodec.encode_blocks(rows, used[lo:hi], luts)
+
+    # ---- pass 1: stored sizes, extent CRCs, dedup mapping --------------
+    nbytes_arr = np.zeros(nb, dtype=np.int64)
+    extent_crcs = np.zeros(nb, dtype=np.uint32)
+    canon = np.arange(nb, dtype=np.int64)  # canonical block per payload
+    seen: dict = {}
+    cap_words = 1
+    for lo in range(0, nb, chunk_blocks):
+        hi = min(lo + chunk_blocks, nb)
+        words, starts, nwords = encode_chunk(lo, hi)
+        if nwords.size:
+            cap_words = max(cap_words, int(nwords.max()))
+        for bi in range(hi - lo):
+            b = lo + bi
+            seg = words[starts[bi] : starts[bi] + nwords[bi]]
+            crc = crc32c(seg)
+            extent_crcs[b] = crc
+            nbytes_arr[b] = 4 * int(nwords[bi])
+            if dedup:
+                # two independent CRCs + length + end words: collisions on
+                # all five at once are out of birthday range for any nb
+                key = (crc, zlib.crc32(seg), int(nwords[bi]),
+                       seg[:2].tobytes(), seg[-2:].tobytes())
+                prev = seen.setdefault(key, b)
+                if prev != b:
+                    canon[b] = prev
+    # ---- consensus windows: by reference, with per-window CRCs ---------
+    cons_w = widths["cons"]
+    w0 = directory[:, D["cons_start"]] // 16
+    cons_win_crcs = np.zeros(nb, dtype=np.uint32)
+    if integrity:
+        for lo in range(0, nb, chunk_blocks):
+            hi = min(lo + chunk_blocks, nb)
+            win = _cons_window_rows(cons, w0[lo:hi], cons_w)
+            for bi in range(hi - lo):
+                cons_win_crcs[lo + bi] = crc32c(win[bi])
+    # ---- extent placement: tight slots, shared when dedup'd ------------
+    slot = -(-nbytes_arr // align) * align
+    is_canon = canon == np.arange(nb, dtype=np.int64)
+    sizes = slot[is_canon]
+    rel_c = np.zeros(sizes.size, dtype=np.int64)
+    if sizes.size > 1:
+        np.cumsum(sizes[:-1], out=rel_c[1:])
+    rel = np.zeros(nb, dtype=np.int64)
+    rel[is_canon] = rel_c
+    rel = rel[canon]  # duplicates point at their canonical slot
+    data_span = int(sizes.sum())
+    extents = np.empty((nb, 2), dtype=np.int64)
+    extents[:, 1] = nbytes_arr
+    L_g = np.zeros(n_groups, dtype=np.int64)
+    p_slot = np.zeros(n_groups, dtype=np.int64)
+    p_rel = np.zeros(n_par, dtype=np.int64)
+    parity_extents = np.zeros((n_par, 2), dtype=np.int64)
+    if parity is not None:
+        for g in range(n_groups):
+            L_g[g] = int(nbytes_arr[g * parity_group : (g + 1) * parity_group].max())
+        p_slot = -(-L_g // align) * align
+        p_sizes = np.repeat(p_slot, m_par)
+        if n_par > 1:
+            np.cumsum(p_sizes[:-1], out=p_rel[1:])
+        parity_extents[:, 1] = np.repeat(L_g, m_par)
+    parity_span = int(np.repeat(p_slot, m_par).sum()) if parity is not None else 0
+    stride = int(slot.max()) if nb else align  # largest stored extent slot
+    dir_enc = sagecodec.encode_i64_table(directory)
+    header = {
+        "meta": json.loads(sf.meta.to_json()),
+        "align": align,
+        "widths": list(layout.widths),
+        "payload_nbytes": layout.payload_nbytes,
+        "stride_nbytes": stride,
+        "n_blocks": nb,
+        "cons_nbytes": int(cons.nbytes),
+        "codec": {
+            "version": sagecodec.CODEC_VERSION,
+            "cap_words": cap_words,
+            "dicts": dicts.tolist(),
+            "dedup": bool(dedup),
+            "dedup_blocks": int(nb - is_canon.sum()),
+            "stored_payload_nbytes": int(nbytes_arr[is_canon].sum()),
+            "dir_nbytes": len(dir_enc),
+            "ext_nbytes": 0,  # patched in the convergence loop below
+        },
+    }
+    if integrity:
+        header["integrity"] = {
+            "algo": "crc32c",
+            "dir_crc": crc32c(dir_enc),  # CRCs cover the ENCODED bytes
+            "cons_crc": crc32c(cons),
+            "extent_crc_section": True,
+            "cons_win_crc_section": True,
+            "footer": True,
+        }
+    if parity is not None:
+        header["parity"] = {
+            "scheme": parity,
+            "group_blocks": parity_group,
+            "shards": m_par,
+            "n_groups": n_groups,
+            "extents_section": True,
+        }
+    crc_nbytes = (nb + n_par) * 4 if integrity else 0
+    cw_nbytes = nb * 4 if integrity else 0
+    data_start = 0
+    hjson = b""
+    ext_enc = b""
+    header_nbytes = cons_offset = 0
+    # extent offsets depend on the header size, which depends (via the
+    # delta-coded extent table and its CRC) on the offsets: iterate to a
+    # fixed point, like the legacy writer's convergence loop
+    for _ in range(16):
+        extents[:, 0] = data_start + rel
+        if parity is not None:
+            parity_extents[:, 0] = data_start + data_span + p_rel
+        ext_enc = sagecodec.encode_i64_table(extents)
+        header["codec"]["ext_nbytes"] = len(ext_enc)
+        if integrity:
+            header["integrity"]["extents_crc"] = crc32c(ext_enc)
+        hjson = json.dumps(header).encode()
+        header_nbytes = (
+            _FIXED + len(hjson) + len(dir_enc) + len(ext_enc)
+            + n_par * 16 + cw_nbytes + crc_nbytes
+        )
+        cons_offset = align_up(header_nbytes, align)
+        new_start = align_up(cons_offset + cons.nbytes, align)
+        if new_start == data_start:
+            break
+        data_start = new_start
+    else:  # pragma: no cover - needs a pathological align/size interaction
+        raise RuntimeError("write_v2: codec header layout failed to converge")
+    # ---- pass 2: payload + parity bytes --------------------------------
+    parity_crcs = np.zeros(n_par, dtype=np.uint32)
+    parity_rows: list = [None] * n_par
+    tmp = path.with_name(f"{path.name}.tmp.{os.getpid()}")
+    try:
+        with open(tmp, "w+b") as f:  # + so the footer can CRC the header back
+            f.write(MAGIC)
+            f.write(np.uint64(len(hjson)).tobytes())
+            f.write(hjson)
+            f.write(dir_enc)
+            f.write(ext_enc)
+            if parity is not None:
+                f.write(parity_extents.tobytes())
+            if integrity:
+                f.write(cons_win_crcs.tobytes())
+                f.write(extent_crcs.tobytes())
+                if parity is not None:
+                    f.write(parity_crcs.tobytes())  # placeholder, patched below
+            f.write(b"\0" * (cons_offset - f.tell()))
+            f.write(cons.tobytes())
+            f.write(b"\0" * (data_start - f.tell()))
+            for lo in range(0, nb, chunk_blocks):
+                hi = min(lo + chunk_blocks, nb)
+                words, starts, nwords = encode_chunk(lo, hi)
+                out = bytearray()
+                for bi in range(hi - lo):
+                    b = lo + bi
+                    if canon[b] != b:
+                        continue  # dedup: shares an earlier block's extent
+                    seg = words[starts[bi] : starts[bi] + nwords[bi]]
+                    out += seg.tobytes()
+                    out += b"\0" * int(slot[b] - nbytes_arr[b])
+                f.write(out)
+                if parity is not None:
+                    # groups never straddle a chunk (chunk_blocks is a
+                    # parity_group multiple); members are padded to the
+                    # group's longest STORED payload
+                    for g0 in range(lo, hi, parity_group):
+                        g = g0 // parity_group
+                        g1 = min(g0 + parity_group, nb)
+                        members = np.zeros((g1 - g0, int(L_g[g])), dtype=np.uint8)
+                        for mi, b in enumerate(range(g0, g1)):
+                            bi = b - lo
+                            seg = words[starts[bi] : starts[bi] + nwords[bi]]
+                            members[mi, : 4 * seg.size] = seg.view(np.uint8)
+                        shards = encode_parity(members, m_par)
+                        for j in range(m_par):
+                            p = g * m_par + j
+                            parity_rows[p] = shards[j]
+                            parity_crcs[p] = crc32c(shards[j])
+            for p in range(n_par):
+                f.write(parity_rows[p].tobytes())
+                f.write(b"\0" * int(p_slot[p // m_par] - L_g[p // m_par]))
+            file_nbytes = f.tell()
+            if integrity:
+                if parity is not None:
+                    f.seek(header_nbytes - n_par * 4)
+                    f.write(parity_crcs.tobytes())
+                f.seek(0)
+                header_crc = crc32c(f.read(header_nbytes))
+                f.seek(file_nbytes)
+                footer = (
+                    FOOTER_MAGIC
+                    + np.uint64(file_nbytes).tobytes()
+                    + np.uint32(header_crc).tobytes()
+                )
+                f.write(footer + np.uint32(crc32c(footer)).tobytes())
+                file_nbytes += FOOTER_NBYTES
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic publish
+        try:  # persist the rename itself (best effort on exotic filesystems)
+            dfd = os.open(path.parent, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass
+    except BaseException:
+        tmp.unlink(missing_ok=True)
+        raise
+    return {
+        "n_blocks": nb,
+        "payload_nbytes": layout.payload_nbytes,
+        "stride_nbytes": stride,
+        "header_nbytes": header_nbytes,
+        "header_json_nbytes": len(hjson),
+        "dir_enc_nbytes": len(dir_enc),
+        "ext_enc_nbytes": len(ext_enc),
+        "cons_nbytes": int(cons.nbytes),
+        "data_start": data_start,
+        "file_nbytes": file_nbytes,
+        "align": align,
+        "integrity": integrity,
+        "checksum_nbytes": crc_nbytes,
+        "cons_win_crc_nbytes": cw_nbytes,
+        "footer_nbytes": FOOTER_NBYTES if integrity else 0,
+        "parity": parity,
+        "parity_group": parity_group if parity is not None else 0,
+        "parity_shards": m_par,
+        "parity_nbytes": parity_span,
+        "parity_overhead": (
+            parity_span / data_span if parity is not None and data_span else 0.0
+        ),
+        "codec": True,
+        "codec_version": sagecodec.CODEC_VERSION,
+        "cap_words": cap_words,
+        "stored_payload_nbytes": int(nbytes_arr[is_canon].sum()),
+        "data_span_nbytes": data_span,
+        "dedup_blocks": int(nb - is_canon.sum()),
     }
 
 
@@ -498,21 +845,36 @@ class SageContainerV2:
                     f"corrupt or truncated container",
                     path=str(self.path), section="header json",
                 ) from e
-            dir_raw = read_exact(f, nb * NDIR * 8, "directory")
-            self.directory = np.frombuffer(dir_raw, dtype=np.int64).reshape(
-                nb, NDIR).copy()
-            ext_raw = read_exact(f, nb * 2 * 8, "extent table")
-            self.extents = np.frombuffer(ext_raw, dtype=np.int64).reshape(
-                nb, 2).copy()
+            self.codec = header.get("codec")
             self.integrity = header.get("integrity")
+            self.parity = header.get("parity")
+            if self.codec:
+                dir_raw = read_exact(
+                    f, int(self.codec["dir_nbytes"]), "directory")
+                ext_raw = read_exact(
+                    f, int(self.codec["ext_nbytes"]), "extent table")
+            else:
+                dir_raw = read_exact(f, nb * NDIR * 8, "directory")
+                ext_raw = read_exact(f, nb * 2 * 8, "extent table")
+            n_par = (
+                int(self.parity["n_groups"]) * int(self.parity["shards"])
+                if self.parity is not None else 0
+            )
+            self._parity_extents: Optional[np.ndarray] = None
+            if self.parity is not None and self.parity.get("extents_section"):
+                pext_raw = read_exact(f, n_par * 16, "parity extent table")
+                self._parity_extents = np.frombuffer(
+                    pext_raw, np.int64).reshape(n_par, 2).copy()
+            self._cons_win_crcs: Optional[np.ndarray] = None
+            if self.integrity and self.integrity.get("cons_win_crc_section"):
+                cw_raw = read_exact(f, nb * 4, "consensus window checksums")
+                self._cons_win_crcs = np.frombuffer(cw_raw, np.uint32).copy()
             self._extent_crcs: Optional[np.ndarray] = None
             if self.integrity and self.integrity.get("extent_crc_section"):
                 crc_raw = read_exact(f, nb * 4, "checksum section")
                 self._extent_crcs = np.frombuffer(crc_raw, np.uint32).copy()
-            self.parity = header.get("parity")
             self._parity_crcs: Optional[np.ndarray] = None
             if self.parity is not None:
-                n_par = int(self.parity["n_groups"]) * int(self.parity["shards"])
                 pcrc_raw = read_exact(f, n_par * 4, "parity checksum section")
                 self._parity_crcs = np.frombuffer(pcrc_raw, np.uint32).copy()
             header_nbytes = f.tell()
@@ -529,6 +891,24 @@ class SageContainerV2:
                         )
                 if self.integrity.get("footer"):
                     self._check_footer(f, header_nbytes, b"".join(region))
+        # VERIFY-THEN-DECODE: the planner tables are only decoded after the
+        # section CRCs (and footer-bound header CRC) above checked out —
+        # the codec never runs on unverified bytes (DESIGN.md §11)
+        try:
+            if self.codec:
+                self.directory = sagecodec.decode_i64_table(dir_raw, nb, NDIR)
+                self.extents = sagecodec.decode_i64_table(ext_raw, nb, 2)
+            else:
+                self.directory = np.frombuffer(dir_raw, dtype=np.int64).reshape(
+                    nb, NDIR).copy()
+                self.extents = np.frombuffer(ext_raw, dtype=np.int64).reshape(
+                    nb, 2).copy()
+        except ValueError as e:
+            raise IntegrityError(
+                f"{self.path}: binary header table is undecodable ({e}) — "
+                f"corrupt container",
+                path=str(self.path), section="directory",
+            ) from e
         self._verify_extents = bool(
             verify and self._extent_crcs is not None
         )
@@ -537,11 +917,21 @@ class SageContainerV2:
             align=int(header["align"]),
         )
         self.stride_nbytes = int(header["stride_nbytes"])
-        # parity shards sit directly after the last data extent (the data
-        # region ends stride-aligned, so no derived-offset padding)
-        self._parity_start = (
-            int(self.extents[:, 0].max()) + self.stride_nbytes if nb else 0
-        )
+        if self.codec:
+            self._codec_dicts = np.asarray(self.codec["dicts"], dtype=np.uint8)
+            self._cap_words = int(self.codec["cap_words"])
+            self._parity_start = (
+                int(self._parity_extents[0, 0])
+                if self._parity_extents is not None and n_par else 0
+            )
+        else:
+            self._codec_dicts = None
+            self._cap_words = 0
+            # parity shards sit directly after the last data extent (the
+            # data region ends stride-aligned, so no derived-offset padding)
+            self._parity_start = (
+                int(self.extents[:, 0].max()) + self.stride_nbytes if nb else 0
+            )
         self._cons_offset = align_up(header_nbytes, self.layout.align)
         self._cons_nbytes = int(header["cons_nbytes"])
         self.io_stats["opens"] += 1
@@ -603,14 +993,7 @@ class SageContainerV2:
     def n_blocks(self) -> int:
         return self.meta.n_blocks
 
-    def gather_block_arrays(self, ids) -> dict[str, np.ndarray]:
-        """Block-major decoder arrays for ``ids`` — the lazy counterpart of
-        :func:`repro.core.decode_jax.prepare_block_arrays`.
-
-        Each run of adjacent extents is read with ONE ranged ``seek``/
-        ``read`` (alignment padding rides along inside a run; nothing else
-        is touched), so a k-block gather costs O(k) extent bytes however
-        the run boundaries fall. ``io_stats`` records every read."""
+    def _check_ids(self, ids) -> np.ndarray:
         ids = np.asarray(ids, dtype=np.int64)
         if ids.ndim != 1:
             raise ValueError(f"block ids must be 1-D, got shape {ids.shape}")
@@ -618,6 +1001,34 @@ class SageContainerV2:
             raise IndexError(
                 f"block ids out of bounds for {self.path} ({self.n_blocks} blocks)"
             )
+        return ids
+
+    def gather_block_arrays(self, ids) -> dict[str, np.ndarray]:
+        """Block-major decoder arrays for ``ids`` — the lazy counterpart of
+        :func:`repro.core.decode_jax.prepare_block_arrays`.
+
+        Each run of adjacent extents is read with ONE ranged ``seek``/
+        ``read`` (alignment padding rides along inside a run; nothing else
+        is touched), so a k-block gather costs O(k) extent bytes however
+        the run boundaries fall. ``io_stats`` records every read.
+
+        On codec containers the extents hold COMPRESSED payloads: this
+        method verifies the stored bytes (:meth:`gather_packed`), decodes
+        them with the host reference decoder, and gathers each block's
+        consensus window from the shared section — the returned arrays are
+        bit-identical to the legacy (raw-extent) path."""
+        ids = self._check_ids(ids)
+        if self.codec:
+            packed = self.gather_packed(ids)
+            arrays = sagecodec.decode_blocks(
+                packed, dict(self.layout.widths), self._codec_dicts
+            )
+            arrays["cons"] = self.gather_consensus_windows(ids)
+            arrays["dir"] = localize_directory(self.directory, ids)
+            self.io_stats["extent_bytes_decoded"] += (
+                int(ids.size) * self.layout.payload_nbytes
+            )
+            return arrays
         stride_w = self.stride_nbytes // 4
         order = np.argsort(ids, kind="stable")
         sids = ids[order]
@@ -643,12 +1054,198 @@ class SageContainerV2:
         finally:
             f.close()
         self.io_stats["blocks_fetched"] += int(ids.size)
+        self.io_stats["extent_bytes_stored"] += int(self.extents[ids, 1].sum())
+        self.io_stats["extent_bytes_decoded"] += (
+            int(ids.size) * self.layout.payload_nbytes
+        )
         if not np.array_equal(sids, ids):
             buf = buf[np.argsort(order, kind="stable")]  # back to request order
         offsets = self.layout.column_offsets()
         arrays = {k: buf[:, offsets[k] : offsets[k] + w] for k, w in self.layout.widths}
         arrays["dir"] = localize_directory(self.directory, ids)
         return arrays
+
+    def gather_packed(self, ids) -> np.ndarray:
+        """CRC-verified STORED (compressed) extent payloads for ``ids``:
+        an (n, cap_words) uint32 array, each row zero-padded past its
+        block's stored words — the direct input of every unpack decoder
+        (host reference, jit, Pallas).
+
+        Dedup-aware: blocks sharing a payload share an extent, which is
+        read and verified once per gather. Only exactly-adjacent slots are
+        coalesced into one ranged read (no gap bytes are ever fetched), so
+        ``extent_bytes_read`` is bounded by the unique compressed slots of
+        the request — the O(k)-compressed-bytes guarantee. Verification
+        runs on the stored bytes BEFORE any decode; a persistent mismatch
+        is healed from parity when present, else :class:`IntegrityError`."""
+        if not self.codec:
+            raise ValueError(f"{self.path}: not a codec container")
+        ids = self._check_ids(ids)
+        cap = self._cap_words
+        out = np.zeros((ids.size, cap), dtype=np.uint32)
+        offs = self.extents[ids, 0]
+        nbs = self.extents[ids, 1]
+        uoff, uidx, uinv = np.unique(offs, return_index=True, return_inverse=True)
+        unb = nbs[uidx]  # a shared offset always carries identical nbytes
+        align = self.layout.align
+        uslot = -(-unb // align) * align
+        rep = np.empty(uoff.size, dtype=np.int64)
+        rep[uinv] = ids  # one representative block per unique extent
+        f = _open_read(self.path)
+        try:
+            i = 0
+            while i < uoff.size:
+                j = i + 1
+                while j < uoff.size and uoff[j] == uoff[j - 1] + uslot[j - 1]:
+                    j += 1
+                base = int(uoff[i])
+                span = int(uoff[j - 1] + unb[j - 1]) - base
+                run_blocks = tuple(int(rep[k]) for k in range(i, j))
+                data, f = self._read_run(f, base, span, run_blocks)
+                self.io_stats["extent_reads"] += 1
+                self.io_stats["extent_bytes_read"] += span
+
+                def segs_of(data):
+                    return {
+                        k: np.frombuffer(
+                            data, np.uint32,
+                            count=int(unb[k]) // 4,
+                            offset=int(uoff[k]) - base,
+                        )
+                        for k in range(i, j)
+                    }
+
+                def bad_of(segs):
+                    return [
+                        k for k in range(i, j)
+                        if crc32c(segs[k]) != int(self._extent_crcs[rep[k]])
+                    ]
+
+                segs = segs_of(data)
+                if self._verify_extents:
+                    bad = bad_of(segs)
+                    if bad:
+                        self.io_stats["checksum_retries"] += 1
+                        data, f = self._read_run(f, base, span, run_blocks)
+                        segs = segs_of(data)
+                        bad = bad_of(segs)
+                    if bad:
+                        self.io_stats["checksum_failures"] += 1
+                        bad_blocks = sorted(int(rep[k]) for k in bad)
+                        if self.parity is not None:
+                            rebuilt = self.reconstruct_blocks(bad_blocks)
+                            for k in bad:
+                                segs[k] = rebuilt[int(rep[k])].view(np.uint32)
+                        else:
+                            raise IntegrityError(
+                                f"{self.path}: extent checksum mismatch for "
+                                f"block(s) {bad_blocks} (persisted through a "
+                                f"re-read) — corrupt extents",
+                                path=str(self.path),
+                                section=f"extent {bad_blocks[0]}",
+                                blocks=tuple(bad_blocks),
+                            )
+                    self.io_stats["blocks_verified"] += int(
+                        np.count_nonzero((uinv >= i) & (uinv < j))
+                    )
+                for k in range(i, j):
+                    out[uinv == k, : segs[k].size] = segs[k]
+                i = j
+        finally:
+            f.close()
+        self.io_stats["blocks_fetched"] += int(ids.size)
+        self.io_stats["extent_bytes_stored"] += int(nbs.sum())
+        return out
+
+    def gather_consensus_windows(self, ids) -> np.ndarray:
+        """Per-block 2-bit consensus window rows, ranged-read from the
+        shared consensus section (codec containers carry windows BY
+        REFERENCE — ``directory[:, cons_start] // 16`` words into the
+        section — instead of duplicating them into every extent).
+        Overlapping/adjacent windows coalesce into one read; rows are
+        zero-filled past the section end and checked against the
+        per-window CRCs (one re-read, then :class:`IntegrityError`)."""
+        ids = self._check_ids(ids)
+        Wc = dict(self.layout.widths)["cons"]
+        total_w = self._cons_nbytes // 4
+        w0 = self.directory[ids, D["cons_start"]] // 16
+        out = np.zeros((ids.size, Wc), dtype=np.uint32)
+        uw0, uinv = np.unique(w0, return_inverse=True)
+        f = _open_read(self.path)
+        try:
+            i = 0
+            while i < uw0.size:
+                j = i + 1
+                end = int(uw0[i]) + Wc
+                while j < uw0.size and int(uw0[j]) <= end:
+                    end = max(end, int(uw0[j]) + Wc)
+                    j += 1
+                start = int(uw0[i])
+                span = 4 * max(0, min(end, total_w) - start)
+
+                def rows_of(data):
+                    buf = np.zeros(end - start, dtype=np.uint32)
+                    got = np.frombuffer(data, np.uint32)
+                    buf[: got.size] = got
+                    return {
+                        k: buf[int(uw0[k]) - start : int(uw0[k]) - start + Wc]
+                        for k in range(i, j)
+                    }
+
+                def bad_of(rows):
+                    if not self._verify_extents or self._cons_win_crcs is None:
+                        return []
+                    # duplicates of a window share its CRC: check via any id
+                    reps = {}
+                    for pos, k in enumerate(uinv):
+                        if i <= k < j:
+                            reps.setdefault(int(k), int(ids[pos]))
+                    return [
+                        k for k in range(i, j)
+                        if crc32c(rows[k]) != int(self._cons_win_crcs[reps[k]])
+                    ]
+
+                data, f = self._read_run(
+                    f, self._cons_offset + 4 * start, span, ())
+                self.io_stats["consensus_bytes_read"] += span
+                rows = rows_of(data)
+                bad = bad_of(rows)
+                if bad:
+                    self.io_stats["checksum_retries"] += 1
+                    data, f = self._read_run(
+                        f, self._cons_offset + 4 * start, span, ())
+                    rows = rows_of(data)
+                    bad = bad_of(rows)
+                    if bad:
+                        self.io_stats["checksum_failures"] += 1
+                        bad_blocks = sorted(
+                            int(b) for pos, b in enumerate(ids)
+                            if int(uinv[pos]) in bad
+                        )
+                        raise IntegrityError(
+                            f"{self.path}: consensus window checksum mismatch "
+                            f"for block(s) {bad_blocks} (persisted through a "
+                            f"re-read) — corrupt consensus section",
+                            path=str(self.path), section="consensus",
+                            blocks=tuple(bad_blocks),
+                        )
+                for k in range(i, j):
+                    out[uinv == k] = rows[k]
+                i = j
+        finally:
+            f.close()
+        return out
+
+    def parity_extent(self, p: int) -> tuple[int, int]:
+        """(offset, nbytes) of parity shard ``p`` — from the explicit
+        parity extent table on codec containers, derived from the uniform
+        stride on legacy ones."""
+        if self._parity_extents is not None:
+            return int(self._parity_extents[p, 0]), int(self._parity_extents[p, 1])
+        return (
+            self._parity_start + int(p) * self.stride_nbytes,
+            self.layout.payload_nbytes,
+        )
 
     def _read_run(self, f, offset: int, nbytes: int, blocks: tuple[int, ...]):
         """One coalesced ranged read with bounded retry.
@@ -744,20 +1341,21 @@ class SageContainerV2:
 
     # -------------------------------------------------- self-healing (PR 8)
 
-    def _read_checked(self, f, offset: int, crc: int, blocks: tuple[int, ...]):
-        """Read one stride-sized slot and CRC-check its payload bytes.
+    def _read_checked(self, f, offset: int, nbytes: int, crc: int,
+                      blocks: tuple[int, ...]):
+        """Read one stored payload (``nbytes`` — compressed on codec
+        containers, the raw payload on legacy ones) and CRC-check it.
 
         One re-read on mismatch (same contract as :meth:`_verify_run`);
         a persistent mismatch returns ``(None, f)`` instead of raising —
         the healing paths treat it as an erasure, the scrub paths as a
         finding."""
-        L = self.layout.payload_nbytes
-        data, f = self._read_run(f, offset, self.stride_nbytes, blocks)
-        row = np.frombuffer(data, np.uint8)[:L]
+        data, f = self._read_run(f, offset, nbytes, blocks)
+        row = np.frombuffer(data, np.uint8)
         if crc32c(row) != int(crc):
             self.io_stats["checksum_retries"] += 1
-            data, f = self._read_run(f, offset, self.stride_nbytes, blocks)
-            row = np.frombuffer(data, np.uint8)[:L]
+            data, f = self._read_run(f, offset, nbytes, blocks)
+            row = np.frombuffer(data, np.uint8)
             if crc32c(row) != int(crc):
                 return None, f
         return row.copy(), f
@@ -782,8 +1380,6 @@ class SageContainerV2:
             )
         pg = int(self.parity["group_blocks"])
         m = int(self.parity["shards"])
-        L = self.layout.payload_nbytes
-        stride = self.stride_nbytes
         groups: dict[int, set[int]] = {}
         for b in {int(x) for x in bad}:
             groups.setdefault(b // pg, set()).add(b)
@@ -792,34 +1388,43 @@ class SageContainerV2:
         self.io_stats["opens"] += 1
         try:
             for g in sorted(groups):
+                # parity runs over STORED payloads, each member zero-padded
+                # to the group's longest (the parity shard length)
+                Lg = self.parity_extent(g * m)[1]
                 erased_set = set(groups[g])
                 known: dict[int, np.ndarray] = {}
                 for b in range(g * pg, min((g + 1) * pg, self.n_blocks)):
                     if b in erased_set:
                         continue
+                    nbytes = int(self.extents[b, 1])
                     row, f = self._read_checked(
-                        f, int(self.extents[b, 0]), self._extent_crcs[b], (b,)
+                        f, int(self.extents[b, 0]), nbytes,
+                        self._extent_crcs[b], (b,)
                     )
                     self.io_stats["extent_reads"] += 1
-                    self.io_stats["extent_bytes_read"] += stride
+                    self.io_stats["extent_bytes_read"] += nbytes
                     if row is None:  # collateral damage found while solving
                         erased_set.add(b)
                     else:
+                        if row.size < Lg:
+                            row = np.concatenate(
+                                [row, np.zeros(Lg - row.size, dtype=np.uint8)]
+                            )
                         known[b - g * pg] = row
                 par: dict[int, np.ndarray] = {}
                 for j in range(m):
                     p = g * m + j
+                    poff, pnb = self.parity_extent(p)
                     row, f = self._read_checked(
-                        f, self._parity_start + p * stride,
-                        self._parity_crcs[p], (),
+                        f, poff, pnb, self._parity_crcs[p], (),
                     )
                     self.io_stats["parity_reads"] += 1
-                    self.io_stats["parity_bytes_read"] += stride
+                    self.io_stats["parity_bytes_read"] += pnb
                     if row is not None:
                         par[j] = row
                 erased = sorted(b - g * pg for b in erased_set)
                 try:
-                    rebuilt = recover_erasures(known, erased, par, L)
+                    rebuilt = recover_erasures(known, erased, par, Lg)
                 except ValueError as e:
                     self.io_stats["reconstruction_failures"] += len(erased_set)
                     raise IntegrityError(
@@ -832,6 +1437,7 @@ class SageContainerV2:
                     ) from e
                 for pos, row in rebuilt.items():
                     b = g * pg + pos
+                    row = row[: int(self.extents[b, 1])]  # strip group padding
                     if crc32c(row) != int(self._extent_crcs[b]):
                         self.io_stats["reconstruction_failures"] += 1
                         raise IntegrityError(
@@ -866,11 +1472,13 @@ class SageContainerV2:
                         f"block id {b} out of bounds for {self.path} "
                         f"({self.n_blocks} blocks)"
                     )
+                nbytes = int(self.extents[b, 1])
                 row, f = self._read_checked(
-                    f, int(self.extents[b, 0]), self._extent_crcs[b], (b,)
+                    f, int(self.extents[b, 0]), nbytes,
+                    self._extent_crcs[b], (b,)
                 )
                 self.io_stats["extent_reads"] += 1
-                self.io_stats["extent_bytes_read"] += self.stride_nbytes
+                self.io_stats["extent_bytes_read"] += nbytes
                 self.io_stats["blocks_verified"] += 1
                 if row is None:
                     bad.append(b)
@@ -895,12 +1503,12 @@ class SageContainerV2:
         self.io_stats["opens"] += 1
         try:
             for p in ps:
+                poff, pnb = self.parity_extent(p)
                 row, f = self._read_checked(
-                    f, self._parity_start + p * self.stride_nbytes,
-                    self._parity_crcs[p], (),
+                    f, poff, pnb, self._parity_crcs[p], (),
                 )
                 self.io_stats["parity_reads"] += 1
-                self.io_stats["parity_bytes_read"] += self.stride_nbytes
+                self.io_stats["parity_bytes_read"] += pnb
                 if row is None:
                     bad.append(p)
         finally:
@@ -922,12 +1530,15 @@ class SageContainerV2:
         try:
             for g in sorted({int(p) // m for p in shards}):
                 rows = []
+                Lg = self.parity_extent(g * m)[1]
                 for b in range(g * pg, min((g + 1) * pg, self.n_blocks)):
+                    nbytes = int(self.extents[b, 1])
                     row, f = self._read_checked(
-                        f, int(self.extents[b, 0]), self._extent_crcs[b], (b,)
+                        f, int(self.extents[b, 0]), nbytes,
+                        self._extent_crcs[b], (b,)
                     )
                     self.io_stats["extent_reads"] += 1
-                    self.io_stats["extent_bytes_read"] += self.stride_nbytes
+                    self.io_stats["extent_bytes_read"] += nbytes
                     if row is None:
                         raise IntegrityError(
                             f"{self.path}: cannot rebuild parity for group "
@@ -935,6 +1546,10 @@ class SageContainerV2:
                             f"reconstruct the data first",
                             path=str(self.path), section=f"extent {b}",
                             blocks=(b,),
+                        )
+                    if row.size < Lg:
+                        row = np.concatenate(
+                            [row, np.zeros(Lg - row.size, dtype=np.uint8)]
                         )
                     rows.append(row)
                 enc = encode_parity(np.stack(rows), m)
@@ -969,9 +1584,7 @@ class SageContainerV2:
                 )
             return row.tobytes()
 
-        L = self.layout.payload_nbytes
-        stride = self.stride_nbytes
-        pad = b"\0" * (stride - L)
+        align = self.layout.align
         tmp = self.path.with_name(f"{self.path.name}.tmp.{os.getpid()}")
         try:
             with open(self.path, "rb") as src, open(tmp, "wb") as dst:
@@ -979,7 +1592,8 @@ class SageContainerV2:
             with open(tmp, "r+b") as f:
                 for b, row in sorted((payloads or {}).items()):
                     b = int(b)
-                    raw = as_bytes(row, L, f"extent {b}")
+                    nbytes = int(self.extents[b, 1])
+                    raw = as_bytes(row, nbytes, f"extent {b}")
                     if crc32c(raw) != int(self._extent_crcs[b]):
                         raise IntegrityError(
                             f"{self.path}: refusing to rewrite extent {b} "
@@ -988,18 +1602,19 @@ class SageContainerV2:
                             blocks=(b,),
                         )
                     f.seek(int(self.extents[b, 0]))
-                    f.write(raw + pad)
+                    f.write(raw + b"\0" * (align_up(nbytes, align) - nbytes))
                 for p, row in sorted((parity_payloads or {}).items()):
                     p = int(p)
-                    raw = as_bytes(row, L, f"parity shard {p}")
+                    poff, pnb = self.parity_extent(p)
+                    raw = as_bytes(row, pnb, f"parity shard {p}")
                     if crc32c(raw) != int(self._parity_crcs[p]):
                         raise IntegrityError(
                             f"{self.path}: refusing to rewrite parity shard "
                             f"{p} with bytes that do not match its stored CRC",
                             path=str(self.path), section=f"parity shard {p}",
                         )
-                    f.seek(self._parity_start + p * stride)
-                    f.write(raw + pad)
+                    f.seek(poff)
+                    f.write(raw + b"\0" * (align_up(pnb, align) - pnb))
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)  # atomic publish, like write_v2
@@ -1053,13 +1668,22 @@ class SageContainerV2:
         meta = self.meta
         words = {s: (meta.stream_bits.get(s, 0) + 31) // 32 for s in STREAMS}
         streams = {s: np.zeros(words[s], dtype=np.uint32) for s in STREAMS}
+        # codec rows zero their tails past each block's own words (the
+        # truncation layer) — scatter only the used prefix so a block's
+        # zeroed tail never clobbers a neighbor's already-placed words
+        used = (
+            sagecodec.used_words(
+                self.directory, meta.stream_bits, dict(self.layout.widths))
+            if self.codec else None
+        )
         for lo in range(0, self.n_blocks, chunk_blocks):
             ids = np.arange(lo, min(lo + chunk_blocks, self.n_blocks), dtype=np.int64)
             rows = self.gather_block_arrays(ids)
             for bi, b in enumerate(ids):
-                for s in STREAMS:
+                for si, s in enumerate(STREAMS):
                     off = int(self.directory[b, D[f"off_{s}"]]) >> 5
-                    n = min(rows[s].shape[1], words[s] - off)
+                    lim = rows[s].shape[1] if used is None else int(used[b, si])
+                    n = min(lim, words[s] - off)
                     if n > 0:
                         streams[s][off : off + n] = rows[s][bi, :n]
         return SageFile(
@@ -1097,6 +1721,7 @@ def container_version(path: str | Path, *, detail: bool = False):
                 pass  # truncated/corrupt header: opening it will say why
             integ = hdr.get("integrity") or {}
             par = hdr.get("parity") or {}
+            cdc = hdr.get("codec") or {}
             return {
                 "version": 2,
                 "integrity": bool(integ),
@@ -1104,11 +1729,14 @@ def container_version(path: str | Path, *, detail: bool = False):
                 "footer": bool(integ.get("footer")),
                 "parity": par.get("scheme"),
                 "parity_shards": int(par.get("shards", 0)),
+                "codec": bool(cdc),
+                "codec_version": int(cdc.get("version", 0)),
             }
     if head[:4] == b"PK\x03\x04":  # zip archive == numpy .npz
         if detail:
             return {"version": 1, "integrity": False, "checksums": False,
-                    "footer": False, "parity": None, "parity_shards": 0}
+                    "footer": False, "parity": None, "parity_shards": 0,
+                    "codec": False, "codec_version": 0}
         return 1
     raise ValueError(
         f"{path}: not a SAGe container (leading bytes {head!r}; expected a "

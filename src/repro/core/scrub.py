@@ -123,7 +123,11 @@ class Scrubber:
                 ids = np.arange(cur, hi, dtype=np.int64)
                 bad = r.verify_blocks(ids)
                 blocks += ids.size
-                nbytes += int(ids.size) * r.stride_nbytes
+                # pace on STORED bytes (per-extent, variable under the
+                # codec) — the scan's actual disk traffic, not the padded
+                # slot stride
+                step_nbytes = int(r.extents[ids, 1].sum())
+                nbytes += step_nbytes
                 if budget is not None:
                     budget -= int(ids.size)
                 findings.extend(self._handle_damage(n, bad))
@@ -131,7 +135,7 @@ class Scrubber:
                 with self._lock:
                     self._cursors[n] = cur % nb if nb else 0
                     self._blocks_scanned += int(ids.size)
-                    self._bytes_scanned += int(ids.size) * r.stride_nbytes
+                    self._bytes_scanned += step_nbytes
                 if self.rate_bps is not None:
                     # cumulative pacing: sleep until the pass-average read
                     # rate drops back under the budget

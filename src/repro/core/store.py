@@ -46,7 +46,9 @@ from repro.core.bitio import unpack_2bit_batch
 from repro.core.decode_jax import (
     DeviceBlocks,
     decode_blocks_bucketed,
+    localize_directory,
     prepare_device_blocks,
+    unpack_block_rows,
 )
 from repro.core.encoder import SageEncoder
 from repro.core.errors import (
@@ -63,7 +65,11 @@ from repro.core.layout import (
     new_io_stats,
     write_v2,
 )
-from repro.distributed.sharding import block_shard_count, make_block_mesh
+from repro.distributed.sharding import (
+    block_shard_count,
+    block_sharding,
+    make_block_mesh,
+)
 
 BlockRange = Union[None, int, tuple, Sequence[int]]
 
@@ -138,12 +144,18 @@ class SageStore:
         shards: Optional[int] = None,
         group_blocks: int = 32,
         cache_budget: Optional[int] = 256 * 2**20,
+        unpack_impl: str = "jnp",
     ) -> None:
         if max_prepared < 1:
             raise ValueError("max_prepared must be >= 1")
         if group_blocks < 1:
             raise ValueError("group_blocks must be >= 1")
+        if unpack_impl not in ("jnp", "pallas"):
+            raise ValueError(
+                f"unpack_impl must be 'jnp' or 'pallas', got {unpack_impl!r}"
+            )
         self.max_prepared = max_prepared
+        self.unpack_impl = unpack_impl
         self.mesh = _resolve_mesh(mesh, shards)
         self.group_blocks = group_blocks
         self.last_write_stats: dict = {}
@@ -686,6 +698,8 @@ class SageStore:
                     dataset=name, block_group=gi,
                 )
             stride = self._group_stride()
+            if r.codec is not None:
+                return self._prepared_group_codec(name, gi, r, stride)
             arrays = self._extent_cache.get(key)
             if arrays is None:
                 lo = gi * self.group_blocks
@@ -729,6 +743,89 @@ class SageStore:
             self._io["group_uploads"] += 1
             self._insert_prepared(key, db)
             return db
+
+    def _prepared_group_codec(
+        self, name: str, gi: int, r: SageContainerV2, stride: int
+    ) -> DeviceBlocks:
+        """Codec-container group residency: cache compressed, unpack on device.
+
+        The host extent cache holds the group's STORED form — the ragged
+        concatenation of verified compressed payload words plus the (raw)
+        consensus windows and localized directory — so the cache budget is
+        spent in compressed bytes, matching the disk footprint rather than
+        the ~10-40x larger decoded rows. On upload the ragged payload is
+        re-padded to the container's uniform ``cap_words`` and undone *on
+        device* by the jitted unpack (``unpack_impl="jnp"``, default) or the
+        Pallas unpack kernel (``"pallas"``; a store mesh always uses the jnp
+        path — the unpack jit shards row-wise under GSPMD). Lock held by
+        ``_prepared_group``, which has already consumed the LRU miss."""
+        key = (name, gi)
+        entry = self._extent_cache.get(key)
+        if entry is None:
+            lo = gi * self.group_blocks
+            hi = min(lo + self.group_blocks, r.meta.n_blocks)
+            ids = np.arange(lo, hi, dtype=np.int64)
+            try:
+                packed = r.gather_packed(ids)
+                cons = r.gather_consensus_windows(ids)
+            except SageIOError as e:
+                e.dataset = name
+                e.block_group = gi
+                self._quarantine_group(name, gi, e)
+                raise
+            lens = ((r.extents[ids, 1] + 3) // 4).astype(np.int64)
+            keep = np.arange(packed.shape[1])[None, :] < lens[:, None]
+            entry = {
+                "payload": np.ascontiguousarray(packed[keep]),
+                "lens": lens,
+                "cons": np.ascontiguousarray(cons),
+                "dir": np.ascontiguousarray(localize_directory(r.directory, ids)),
+            }
+            self._extent_cache.put(
+                key, entry, int(sum(v.nbytes for v in entry.values()))
+            )
+        lens = entry["lens"]
+        n = int(lens.size)
+        cap = r._cap_words
+        buf = np.zeros((stride, cap), dtype=np.uint32)
+        keep = np.arange(cap)[None, :] < lens[:, None]
+        buf[:n][keep] = entry["payload"]
+        cons = np.zeros((stride,) + entry["cons"].shape[1:], entry["cons"].dtype)
+        cons[:n] = entry["cons"]
+        dirr = np.zeros((stride,) + entry["dir"].shape[1:], entry["dir"].dtype)
+        dirr[:n] = entry["dir"]
+        widths = dict(r.layout.widths)
+        if self.mesh is not None:
+            buf_d = jax.device_put(buf, block_sharding(self.mesh, buf.ndim))
+            arrays = dict(unpack_block_rows(buf_d, r._codec_dicts, widths))
+            arrays = {
+                k: jax.device_put(v, block_sharding(self.mesh, v.ndim))
+                for k, v in arrays.items()
+            }
+            arrays["cons"] = jax.device_put(cons, block_sharding(self.mesh, 2))
+            arrays["dir"] = jax.device_put(dirr, block_sharding(self.mesh, 2))
+        else:
+            if self.unpack_impl == "pallas":
+                from repro.kernels.sage_decode import sage_unpack_pallas
+
+                arrays = dict(sage_unpack_pallas(buf, r._codec_dicts, widths))
+            else:
+                arrays = dict(unpack_block_rows(buf, r._codec_dicts, widths))
+            arrays["cons"] = jnp.asarray(cons)
+            arrays["dir"] = jnp.asarray(dirr)
+        self._io["extent_bytes_decoded"] += n * r.layout.payload_nbytes
+        db = DeviceBlocks(
+            arrays=arrays,
+            caps=r.meta.caps,
+            classes=r.meta.classes,
+            fixed_len=r.meta.fixed_read_len,
+            n_blocks=stride,
+            on_device=True,
+            mesh=self.mesh,
+        )
+        self._io["group_uploads"] += 1
+        self._insert_prepared(key, db)
+        return db
 
     def prepared_for(self, name: str, ids) -> tuple[DeviceBlocks, np.ndarray]:
         """Device residency covering ``ids`` + local row indices into it.

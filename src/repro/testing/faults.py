@@ -195,7 +195,10 @@ def corrupt_extent(path, block: int, *, byte: int = 0, bit: int = 0) -> Callable
     from repro.core.layout import SageContainerV2
 
     c = SageContainerV2.open(path)
-    off = int(c.extents[block, 0]) + byte
+    # codec extents are payload-sized: wrap the offset into the STORED
+    # length so the flip always lands in bytes a read actually touches
+    # (never the alignment pad, where it would be a harmless no-op)
+    off = int(c.extents[block, 0]) + byte % int(c.extents[block, 1])
     return flip_bit(path, off, bit)
 
 
@@ -237,5 +240,5 @@ def corrupt_parity(
     if not 0 <= shard < m:
         raise ValueError(f"parity shard {shard} out of range (container has {m})")
     p = int(group) * m + int(shard)
-    off = c._parity_start + p * c.stride_nbytes + byte
+    off = c.parity_extent(p)[0] + byte
     return flip_bit(path, off, bit)

@@ -86,14 +86,18 @@ def test_container_version_detail(dataset, tmp_path):
     assert container_version(path) == 2
     assert container_version(path, detail=True) == {
         "version": 2, "integrity": True, "checksums": True, "footer": True,
-        "parity": None, "parity_shards": 0,
+        "parity": None, "parity_shards": 0, "codec": True, "codec_version": 1,
     }
     legacy = tmp_path / "legacy.sage2"
     write_v2(sf, legacy, integrity=False)
     assert container_version(legacy, detail=True) == {
         "version": 2, "integrity": False, "checksums": False, "footer": False,
-        "parity": None, "parity_shards": 0,
+        "parity": None, "parity_shards": 0, "codec": True, "codec_version": 1,
     }
+    raw = tmp_path / "raw.sage2"
+    write_v2(sf, raw, codec=False)
+    detail = container_version(raw, detail=True)
+    assert detail["codec"] is False and detail["codec_version"] == 0
     v1 = tmp_path / "v1.sage.npz"
     sf.save(v1)
     assert container_version(v1, detail=True)["integrity"] is False
@@ -158,21 +162,22 @@ def test_atomic_write_crash_leaves_no_partial_file(dataset, tmp_path, monkeypatc
 def _section_cuts(stats, pristine):
     """A few bytes short of each section boundary -> the section named."""
     hj = stats["header_nbytes"]  # header region ends after the crc section
-    nb = stats["n_blocks"]
-    crc_at = hj - stats["checksum_nbytes"]  # start of checksum section
-    ext_at = crc_at - nb * 2 * 8  # start of extent table
+    crc_at = hj - stats["checksum_nbytes"]  # start of extent checksums
+    cw_at = crc_at - stats["cons_win_crc_nbytes"]  # cons-window checksums
+    ext_at = cw_at - stats["ext_enc_nbytes"]  # start of (packed) extent table
     return [
         (4, "magic"),
         (12, "header length"),
         (30, "header json"),
         (ext_at - 8, "directory"),  # directory comes up 8 bytes short
-        (crc_at - 8, "extent table"),
+        (cw_at - 8, "extent table"),
+        (crc_at - 2, "consensus window checksums"),
         (hj - 2, "checksum section"),
         (len(pristine) - 3, "commit footer"),  # footer cut mid-way
     ]
 
 
-@pytest.mark.parametrize("which", range(7))
+@pytest.mark.parametrize("which", range(8))
 def test_truncation_names_failing_section(dataset, tmp_path, which):
     sf, _, stats, pristine = dataset
     cut, section = _section_cuts(stats, pristine)[which]
@@ -213,7 +218,9 @@ def test_header_region_flip_detected_at_open(dataset, tmp_path):
     _, _, stats, pristine = dataset
     p = tmp_path / "dirflip.sage2"
     data = bytearray(pristine)
-    data[stats["header_nbytes"] - stats["checksum_nbytes"] - 9] ^= 0x04  # extent table
+    cw_at = (stats["header_nbytes"] - stats["checksum_nbytes"]
+             - stats["cons_win_crc_nbytes"])
+    data[cw_at - stats["ext_enc_nbytes"] // 2] ^= 0x04  # mid extent table
     p.write_bytes(bytes(data))
     with pytest.raises((IntegrityError, TornWriteError)):
         reopen(p)

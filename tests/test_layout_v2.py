@@ -61,9 +61,30 @@ def test_v2_roundtrip_bit_identical(v2_setup):
     np.testing.assert_array_equal(c.directory, sf.directory)
     assert c.to_sage_file().diff(sf) == []
     assert stats["file_nbytes"] == os.path.getsize(path)
-    # extents are stride-aligned and disjoint
+    # codec extents (the default): canonical payloads tightly packed into
+    # aligned payload-sized slots, stored strictly smaller than decoded
+    assert stats["codec"] and stats["codec_version"] >= 1
+    a = stats["align"]
+    offs, nbs = c.extents[:, 0], c.extents[:, 1]
+    uoff, uidx = np.unique(offs, return_index=True)
+    slots = -(-nbs[uidx] // a) * a
+    assert np.all(np.diff(uoff) == slots[:-1])  # tight canonical packing
+    assert int(nbs[uidx].sum()) == stats["stored_payload_nbytes"]
+    assert stats["stride_nbytes"] == int(slots.max())
+    assert stats["stored_payload_nbytes"] < stats["n_blocks"] * stats["payload_nbytes"]
+
+
+def test_v2_legacy_raw_layout(v2_setup, tmp_path):
+    """``codec=False`` keeps the raw stride-aligned layout: uniform extents,
+    bit-identical round trip — the pre-codec on-disk format."""
+    sf, _, _, _ = v2_setup
+    p = tmp_path / "raw.sage2"
+    stats = write_v2(sf, p, align=512, codec=False)
+    c = SageContainerV2.open(p)
+    assert not stats["codec"] and c.codec is None
     assert np.all(np.diff(c.extents[:, 0]) == stats["stride_nbytes"])
     assert np.all(c.extents[:, 1] == stats["payload_nbytes"])
+    assert c.to_sage_file().diff(sf) == []
 
 
 def test_v2_roundtrip_variable_length(tmp_path):
@@ -124,8 +145,13 @@ def test_lazy_ranged_read_bit_identical_to_v1(v2_setup, fmt, use_pallas):
 
 
 def test_gather_block_arrays_matches_host_prepare(v2_setup):
-    """The lazy gather IS the decoder layout: byte-identical to the v1 host
-    gather for an arbitrary (unsorted, duplicated) id set."""
+    """The lazy gather IS the decoder layout, for an arbitrary (unsorted,
+    duplicated) id set. Codec rows are equal on every word the decoder may
+    read (the block's used words) and ZERO past them, where the v1 host
+    gather carries neighboring blocks' bits — the decode output is
+    bit-identical either way (the 64-bit-window field extraction masks by
+    width and never consumes tail bits)."""
+    from repro.core import codec as sagecodec
     from repro.core.decode_jax import prepare_block_arrays
 
     sf, path, _, _ = v2_setup
@@ -134,7 +160,16 @@ def test_gather_block_arrays_matches_host_prepare(v2_setup):
     lazy = c.gather_block_arrays(ids)
     eager = prepare_block_arrays(sf, ids)
     assert set(lazy) == set(eager) == set(STREAMS) | {"cons", "dir"}
-    for k in eager:
+    used = sagecodec.used_words(
+        sf.directory, sf.meta.stream_bits, dict(c.layout.widths)
+    )
+    for si, s in enumerate(STREAMS):
+        m = np.arange(lazy[s].shape[1])[None, :] < used[ids, si][:, None]
+        np.testing.assert_array_equal(
+            np.where(m, lazy[s], 0), np.where(m, eager[s], 0), err_msg=s
+        )
+        assert np.all(lazy[s][~m] == 0), s  # codec rows carry no tail bits
+    for k in ("cons", "dir"):  # windows + localized directory: exact
         np.testing.assert_array_equal(lazy[k], eager[k], err_msg=k)
     with pytest.raises(IndexError):
         c.gather_block_arrays([sf.meta.n_blocks])
@@ -158,13 +193,21 @@ def test_ranged_read_is_o_k_bytes(v2_setup):
     container. Repeat reads hit device residency (zero new disk bytes), and
     device eviction refills from the host extent cache, still disk-free."""
     _, path, stats, _ = v2_setup
+    c = SageContainerV2.open(path)
+    a = stats["align"]
+    nbs = c.extents[:4, 1]
+    slots = -(-nbs // a) * a
     store = lazy_store(path, group_blocks=4)
     sess = store.session()
     sess.read("ds", (0, 4))  # one residency group
     io = store.io_stats
     assert io["header_bytes"] == stats["header_nbytes"] + stats["footer_nbytes"]
     assert io["extent_reads"] == 1  # 4 adjacent extents -> ONE coalesced read
-    assert io["extent_bytes_read"] == 4 * stats["stride_nbytes"]
+    # O(k) in COMPRESSED bytes: at least the stored payloads, at most their
+    # aligned slots — never scaled by the decoded payload size
+    assert int(nbs.sum()) <= io["extent_bytes_read"] <= int(slots.sum())
+    assert io["extent_bytes_stored"] == int(nbs.sum())
+    assert io["extent_bytes_read"] < 4 * stats["payload_nbytes"]  # compression
     assert io["extent_bytes_read"] < stats["file_nbytes"]
     sess.read("ds", (0, 4))  # device-resident: no I/O at all
     assert store.io_stats["extent_bytes_read"] == io["extent_bytes_read"]
@@ -214,7 +257,11 @@ def test_oversized_group_never_cached(v2_setup):
     io = store.io_stats
     assert io["cache_oversize_skips"] >= 2
     assert io["cache_bytes"] == 0 and io["cache_peak_bytes"] == 0
-    assert io["extent_bytes_read"] == before + 4 * stats["stride_nbytes"]
+    c = SageContainerV2.open(path)
+    a = stats["align"]
+    nbs = c.extents[:4, 1]
+    slots = -(-nbs // a) * a
+    assert before + int(nbs.sum()) <= io["extent_bytes_read"] <= before + int(slots.sum())
 
 
 def test_cached_groups_own_their_bytes(v2_setup):

@@ -234,7 +234,7 @@ def test_scan_rebuild_rewrite_parity_shard(parity_path):
 
 def test_rewrite_refuses_bytes_not_matching_stored_crc(parity_path):
     c = SageContainerV2.open(parity_path)
-    L = c.layout.payload_nbytes
+    L = int(c.extents[0, 1])  # stored (codec) extent length, not decoded
     with pytest.raises(IntegrityError, match="stored CRC"):
         c.rewrite_extents({0: np.full(L, 0xAB, np.uint8)})
 

@@ -27,6 +27,14 @@ corrupted or torn output also fails verify, printing the failing section.
 
 ``--legacy`` writes the pre-checksum v2 layout (no CRC section, no commit
 footer) — for readers that predate the integrity format.
+
+Compression (DESIGN.md §11): v2 output is codec-compressed by default —
+per-extent word truncation + nibble dictionaries, compact binary
+directory/extent tables, payload-sized slots. ``--recompress`` makes that
+intent explicit for v2 -> v2 migrations (re-encoding an old raw container
+shrinks it by orders of magnitude; old containers keep reading
+bit-identically without migration). ``--no-codec`` (implied by
+``--legacy``) writes the raw stride-aligned layout instead.
 """
 
 from __future__ import annotations
@@ -98,8 +106,15 @@ def main(argv=None) -> int:
                     help="destination path (omitted for --repair, which is in place)")
     ap.add_argument("--to-v1", action="store_true",
                     help="write a v1 .npz instead of a v2 block-extent container")
-    ap.add_argument("--align", type=int, default=DEFAULT_ALIGN,
-                    help=f"v2 extent alignment in bytes (default {DEFAULT_ALIGN})")
+    ap.add_argument("--align", type=int, default=None,
+                    help="v2 extent alignment in bytes (default: the codec's "
+                         f"small alignment, or {DEFAULT_ALIGN} with --no-codec)")
+    ap.add_argument("--recompress", action="store_true",
+                    help="re-encode every extent with the per-extent codec "
+                         "(explicit form of the v2 default; rejects --no-codec)")
+    ap.add_argument("--no-codec", action="store_true",
+                    help="write the raw stride-aligned v2 layout instead of "
+                         "codec-compressed extents")
     ap.add_argument("--verify", action="store_true",
                     help="re-open the output and check section-by-section bit-identity "
                          "(on v2 output this also runs the checksum layer)")
@@ -127,6 +142,10 @@ def main(argv=None) -> int:
     if args.add_parity and (args.to_v1 or args.legacy):
         ap.error("--add-parity needs the checksummed v2 layout "
                  "(drop --to-v1/--legacy)")
+    if args.recompress and (args.no_codec or args.to_v1 or args.legacy):
+        ap.error("--recompress writes codec-compressed v2 extents "
+                 "(drop --no-codec/--to-v1/--legacy)")
+    codec = not (args.no_codec or args.legacy)
 
     sf = _load_any(args.src)
     if args.to_v1:
@@ -138,14 +157,30 @@ def main(argv=None) -> int:
                          integrity=not args.legacy,
                          parity=args.add_parity,
                          parity_group=args.parity_group,
-                         parity_shards=args.parity_shards)
+                         parity_shards=args.parity_shards,
+                         codec=codec)
         parity_note = (
             f", parity {stats['parity']} x{stats['parity_shards']}/"
             f"{stats['parity_group']} (+{100 * stats['parity_overhead']:.1f}%)"
             if stats["parity"] else ""
         )
+        if stats["codec"]:
+            raw = stats["n_blocks"] * stats["payload_nbytes"]
+            stored = stats["stored_payload_nbytes"]
+            extent_note = (
+                f"codec extents ({stored/1e6:.2f} MB stored / "
+                f"{raw/1e6:.2f} MB decoded = {raw/max(stored, 1):.1f}x"
+                + (f", {stats['dedup_blocks']} deduped"
+                   if stats["dedup_blocks"] else "")
+                + ")"
+            )
+        else:
+            extent_note = (
+                f"{stats['stride_nbytes']} B raw extents "
+                f"(payload {stats['payload_nbytes']} B)"
+            )
         print(f"v2 <- {args.src}: {stats['n_blocks']} blocks x "
-              f"{stats['stride_nbytes']} B extents (payload {stats['payload_nbytes']} B), "
+              f"{extent_note}, "
               f"header {stats['header_nbytes']/1e3:.1f} KB"
               f"{' (legacy, unchecksummed)' if args.legacy else ''}{parity_note}, "
               f"total {stats['file_nbytes']/1e6:.2f} MB -> {args.dst}")

@@ -155,6 +155,127 @@ def bench_first_batch(v1_path: str, v2_path: str, group_blocks: int, cache_budge
     return out
 
 
+def bench_streaming(
+    v2_path: str, group_blocks: int, cache_budget: int,
+    n_fetches: int, blocks_per_fetch: int,
+) -> dict:
+    """Steady-state streaming decode: pipelined (background I/O + fused
+    decode, ``mode="pipelined"``) vs the sequential-per-fetch baseline
+    (``mode="sync"``: fetch, decode, block, repeat). Both run on a cold
+    store over the SAME codec v2 container, so the pipelined column's win
+    is pure overlap + fusion, not caching.
+
+    Reported per mode: TTFB (first batch materialized), steady-state
+    throughput (bases/s and decoded-payload bytes/s, excluding the first
+    batch), and for the pipelined run its per-stage stats. The roofline
+    bound is computed from the measured stage times (``streaming_roofline``)
+    — a perfectly overlapped pipeline runs at the slowest stage's speed."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from roofline import streaming_roofline
+
+    from repro.core.decode_jax import TRACE_COUNTS
+
+    def run(mode: str):
+        store = SageStore(group_blocks=group_blocks, cache_budget=cache_budget)
+        store.register("ds", v2_path)
+        sess = store.session(fused=(mode == "pipelined"))
+        stream = sess.read_stream(
+            "ds", fmt="2bit", blocks_per_fetch=blocks_per_fetch,
+            max_fetches=n_fetches, mode=mode,
+        )
+        ntok = np.asarray(store.directory("ds")[:, D["n_tokens"]], dtype=np.int64)
+        payload_per_block = store.block_nbytes("ds")
+        batches, times = [], []
+        traces_after_first = None
+        t0 = time.perf_counter()
+        for sb in stream:
+            jax.block_until_ready(sb.data["tokens"])
+            times.append(time.perf_counter() - t0)
+            batches.append(sb)
+            if traces_after_first is None:
+                traces_after_first = sum(TRACE_COUNTS.values())
+        out = {
+            "ttfb_seconds": times[0],
+            "total_seconds": times[-1],
+            "fetches": len(batches),
+        }
+        if len(times) >= 2:
+            ids = np.concatenate([np.asarray(b.block_ids) for b in batches[1:]])
+            dt = times[-1] - times[0]
+            out["steady_seconds"] = dt
+            out["steady_bases_per_s"] = float(ntok[ids].sum()) / max(dt, 1e-9)
+            out["steady_bytes_per_s"] = ids.size * payload_per_block / max(dt, 1e-9)
+        if mode == "pipelined":
+            out["stream_stats"] = {
+                k: round(v, 6) if isinstance(v, float) else v
+                for k, v in stream.stats.to_dict().items()
+            }
+            # all fetches share one shape bucket, so every compile lands at
+            # or before batch 0's delivery — steady state must not retrace
+            out["steady_retraces"] = sum(TRACE_COUNTS.values()) - traces_after_first
+        return out, batches
+
+    # warm the jit caches for BOTH decode paths on a throwaway store so
+    # TTFB measures the data path, not first-trace compile time
+    warm = SageStore(group_blocks=group_blocks, cache_budget=cache_budget)
+    warm.register("ds", v2_path)
+    span = (0, blocks_per_fetch)
+    jax.block_until_ready(warm.session().read("ds", span)["tokens"])
+    jax.block_until_ready(warm.session(fused=True).read("ds", span)["tokens"])
+    del warm
+
+    seq, seq_batches = run("sync")
+    pipe, pipe_batches = run("pipelined")
+
+    identical = len(seq_batches) == len(pipe_batches)
+    for a, b in zip(seq_batches[:4], pipe_batches[:4]):  # bound host bytes
+        for key in ("tokens", "n_reads", "n_tokens", "read_start"):
+            if not np.array_equal(np.asarray(a.data[key]), np.asarray(b.data[key])):
+                identical = False
+    s = pipe["stream_stats"]
+    store = SageStore(group_blocks=group_blocks)
+    store.register("ds", v2_path)
+    payload_bytes = pipe["fetches"] * blocks_per_fetch * store.block_nbytes("ds")
+    decode_s = s["dispatch_seconds"] + s["consume_seconds"]
+    components = {
+        "disk": payload_bytes / s["io_seconds"] if s["io_seconds"] > 0 else 0.0,
+        "upload": payload_bytes / s["upload_seconds"] if s["upload_seconds"] > 0 else 0.0,
+        "decode": payload_bytes / decode_s if decode_s > 0 else 0.0,
+    }
+    achieved = pipe.get("steady_bytes_per_s", payload_bytes / pipe["total_seconds"])
+    # the DERIVED overlap target (not hand-picked): perfect overlap runs the
+    # pipeline at its slowest stage, so the achievable speedup over the
+    # sequential baseline is bounded by sum(stage)/max(stage) on THIS
+    # machine. On a single-core host every stage shares the one CPU and the
+    # bound collapses toward 1.0 — the roofline, not a fixed ratio, is what
+    # the pipeline is judged against.
+    stage_seconds = {"disk": s["io_seconds"], "upload": s["upload_seconds"],
+                     "decode": decode_s}
+    stage_total = sum(stage_seconds.values())
+    out = {
+        "sequential": seq,
+        "pipelined": pipe,
+        "bit_identical": identical,
+        "speedup_vs_sequential": (
+            pipe.get("steady_bytes_per_s", 0.0)
+            / max(seq.get("steady_bytes_per_s", 1e-9), 1e-9)
+        ),
+        "ttfb_ratio": pipe["ttfb_seconds"] / max(seq["ttfb_seconds"], 1e-9),
+        "overlap_fraction": s["overlap_fraction"],
+        "overlap_bound_speedup": stage_total / max(max(stage_seconds.values()), 1e-9),
+        "host_cpus": os.cpu_count(),
+        "roofline": streaming_roofline(components, achieved),
+    }
+    # gates: bit identity; the stages demonstrably overlapped; first-batch
+    # latency did not regress (10% + 50ms timer-noise allowance)
+    out["streaming_ok"] = (
+        identical
+        and s["overlap_fraction"] > 0
+        and pipe["ttfb_seconds"] <= 1.10 * seq["ttfb_seconds"] + 0.05
+    )
+    return out
+
+
 def check_identity(
     v1_path: str, v2_path: str, v2_raw_path: str, group_blocks: int, nb: int
 ) -> dict:
@@ -256,6 +377,12 @@ def main(argv=None) -> int:
         "correctness": check_identity(
             v1_path, v2_path, v2_raw_path, group_blocks, sf.meta.n_blocks
         ),
+        "streaming": bench_streaming(
+            v2_path, group_blocks, cache_budget,
+            n_fetches=max(3, min(8 if args.smoke else 48,
+                                 sf.meta.n_blocks // group_blocks)),
+            blocks_per_fetch=group_blocks,
+        ),
     }
 
     # compression economics of the codec container (PR 9): stored vs decoded
@@ -311,6 +438,7 @@ def main(argv=None) -> int:
 
     corr = report["correctness"]
     comp = report["compression"]
+    strm = report["streaming"]
     print(
         f"open: v1 {report['open']['v1']['seconds']:.3f}s vs v2 "
         f"{report['open']['v2']['seconds']*1e3:.2f}ms | ranged {args.k} blocks: "
@@ -321,6 +449,11 @@ def main(argv=None) -> int:
         f"{report['first_batch']['first_batch_speedup']:.1f}x faster | "
         f"codec {comp['v2_over_v1']:.2f}x v1 "
         f"({comp['codec_shrink_vs_raw']:.1f}x smaller than raw v2) | "
+        f"streaming {strm['speedup_vs_sequential']:.2f}x sequential, overlap "
+        f"{strm['overlap_fraction']:.2f}, roofline_frac "
+        f"{strm['roofline']['roofline_frac']:.2f} "
+        f"(bottleneck {strm['roofline']['bottleneck']}), ttfb "
+        f"{strm['ttfb_ratio']:.2f}x | "
         f"bit-identical={corr['v2_bit_identical_to_v1']} -> {args.out}"
     )
     if args.workdir is None:
@@ -331,6 +464,11 @@ def main(argv=None) -> int:
             and comp["ratio_ok"]):
         print("FAIL: v2 mismatch, O(k) bytes contract, cache budget, or "
               "compression ratio (> 4x v1) violated", file=sys.stderr)
+        return 1
+    if not strm["streaming_ok"]:
+        print("FAIL: streaming gate — pipelined decode not bit-identical to "
+              "sequential, stages did not overlap (overlap_fraction <= 0), "
+              "or TTFB regressed past 10%", file=sys.stderr)
         return 1
     return 0
 

@@ -1,5 +1,7 @@
 """Roofline table generator: reads launch/dryrun artifacts and emits the
-EXPERIMENTS.md §Roofline table (+ CSV rows for run.py)."""
+EXPERIMENTS.md §Roofline table (+ CSV rows for run.py). Also home of the
+streaming-pipeline roofline (``streaming_roofline``) used by io_bench's
+``streaming`` section."""
 
 from __future__ import annotations
 
@@ -7,6 +9,33 @@ import json
 from pathlib import Path
 
 ART = Path(__file__).parent / "artifacts" / "dryrun"
+
+
+def streaming_roofline(components: dict, achieved_bps: float) -> dict:
+    """Roofline bound for the disk -> host -> device -> decode scan pipeline.
+
+    ``components`` maps stage name -> measured standalone throughput
+    (bytes/s of decoded payload through that stage, e.g. ``{"disk": ...,
+    "upload": ..., "decode": ...}``). A perfectly overlapped pipeline runs
+    at the slowest stage's speed — that minimum is the roofline bound;
+    ``roofline_frac`` is how much of it the measured end-to-end throughput
+    achieves (can only reach 1.0 when every other stage hides completely).
+    Zero/absent stages (e.g. a fully host-cached run never touching disk)
+    are excluded from the bound rather than treated as infinitely slow."""
+    finite = {k: v for k, v in components.items() if v and v > 0}
+    if not finite:
+        return {"components_bps": dict(components), "bound_bps": None,
+                "bottleneck": None, "achieved_bps": achieved_bps,
+                "roofline_frac": None}
+    bottleneck = min(finite, key=finite.get)
+    bound = finite[bottleneck]
+    return {
+        "components_bps": dict(components),
+        "bound_bps": bound,
+        "bottleneck": bottleneck,
+        "achieved_bps": achieved_bps,
+        "roofline_frac": achieved_bps / bound,
+    }
 
 
 def records(pod: str = "pod1", tag: str = "") -> list[dict]:

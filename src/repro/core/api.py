@@ -32,6 +32,7 @@ from repro.core.decode_jax import (
     DeviceBlocks,
     decode_blocks_bucketed,
     prepare_device_blocks,
+    register_format_fuser,
 )
 from repro.core.encoder import SageEncoder
 from repro.core.format import SageFile
@@ -192,6 +193,15 @@ def apply_format(
 register_format(FormatSpec("2bit", "tokens", None, doc="int8 base codes 0..3, PAD=4"))
 register_format(FormatSpec("onehot", "onehot", _apply_one_hot, doc="(.., C, 4) bf16 one-hot"))
 register_format(FormatSpec("kmer", "kmer", _apply_kmer, requires_k=True, doc="packed k-mer LM ids"))
+
+# fusers for the single-dispatch decode+format path (fused sessions): pure
+# jnp over the padded decode dict, traced inside the fused jit/kernel —
+# same expressions as the two-step appliers above, so output is
+# bit-identical. Custom registered formats without a fuser simply take the
+# two-step path.
+register_format_fuser("2bit", "tokens", None)
+register_format_fuser("onehot", "onehot", lambda dec, kmer_k: one_hot_bases(dec["tokens"]))
+register_format_fuser("kmer", "kmer", lambda dec, kmer_k: kmer_pack(dec["tokens"], kmer_k, dec["n_tokens"]))
 
 
 # -- one-shot commands (compat wrappers; consumers use SageStore) -----------

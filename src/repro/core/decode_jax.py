@@ -765,6 +765,123 @@ def decode_blocks_bucketed(
     return {k: v[: ids.size] for k, v in out.items()}
 
 
+# --------------------------------------------------------------------------
+# fused decode: gather + unpack + reformat in ONE dispatch
+# --------------------------------------------------------------------------
+# The two-step hot path launches gather, decode, and format as separate jits
+# (three dispatches per read). The fused path collapses them: one jit (vmap)
+# or one gather + single Pallas kernel whose body decodes AND formats, so the
+# formatted output lands directly in the consumer's layout. All the math is
+# integer/boolean, so fused output is bit-identical to the two-step path.
+#
+# Formats opt in through a FUSER registry: ``fn(dec, kmer_k) -> array`` maps
+# the padded decode dict to the format's output array with pure jnp ops
+# (traceable both inside the vmap jit and inside the Pallas kernel body).
+# repro.core.api registers the built-in formats at import; custom formats
+# without a fuser transparently fall back to the two-step path.
+
+#: fmt name -> (out_key, fuser fn | None); None = decode IS the format (2bit)
+_FORMAT_FUSERS: dict[str, tuple[str, Optional[Callable]]] = {}
+
+#: path kind ("vmap"/"pallas") -> builder of the fused padded-decode runner
+_FUSED_DECODERS: dict[str, Callable] = {}
+
+
+def register_format_fuser(name: str, out_key: str, fn: Optional[Callable] = None) -> None:
+    """Register ``fmt``'s fused formatter: ``fn(dec, kmer_k) -> jax.Array``
+    over the padded decode dict, pure jnp (it is traced inside the fused
+    jit/kernel). ``fn=None`` marks a format whose output is the decode
+    itself (2bit)."""
+    _FORMAT_FUSERS[name] = (out_key, fn)
+
+
+def fused_format_supported(name: str) -> bool:
+    return name in _FORMAT_FUSERS
+
+
+def register_fused_decoder(kind: str, build: Callable) -> None:
+    """Register a fused decode-path builder: ``build(caps_h, classes_key,
+    fixed_len, fmt_name, kmer_k, opts)`` returns a runner mapping
+    ``(arrays, padded_ids, valid) -> decode dict + format out_key``, all at
+    the padded bucket shape."""
+    _FUSED_DECODERS[kind] = build
+
+
+@functools.partial(
+    jax.jit, static_argnames=("caps", "classes", "fixed_len", "fmt_name", "kmer_k")
+)
+def _fused_vmap_jit(arrays, ids, valid, caps, classes, fixed_len, fmt_name, kmer_k):
+    TRACE_COUNTS["fused_vmap"] += 1
+    cd = {k: tuple(v) for k, v in classes}
+    sub = {k: v[ids] for k, v in arrays.items()}
+    sub["valid"] = valid[:, None].astype(jnp.int32)
+    out = dict(jax.vmap(
+        lambda blk: decode_block_arrays(blk, caps=caps, classes=cd, fixed_len=fixed_len)
+    )(sub))
+    out_key, fn = _FORMAT_FUSERS[fmt_name]
+    if fn is not None:
+        out[out_key] = fn(out, kmer_k)
+    return out
+
+
+def _build_vmap_fused(caps_h, classes_key, fixed_len, fmt_name, kmer_k, opts):
+    def run(arrays, ids, valid):
+        return _fused_vmap_jit(
+            arrays, ids, valid, caps=caps_h, classes=classes_key,
+            fixed_len=fixed_len, fmt_name=fmt_name, kmer_k=kmer_k,
+        )
+    return run
+
+
+register_fused_decoder("vmap", _build_vmap_fused)
+
+
+def fused_decode_blocks_bucketed(
+    db: DeviceBlocks,
+    ids: np.ndarray,
+    *,
+    fmt_name: str,
+    kmer_k: Optional[int] = None,
+    path_key=None,
+) -> dict[str, jax.Array]:
+    """Single-dispatch bucketed decode+format — the fused twin of
+    ``decode_blocks_bucketed(..., postprocess=apply_format)``.
+
+    Same pad/mask/slice invariants (compiles once per bucket), bit-identical
+    outputs; ``path_key`` selects the runner (None = the fused vmap jit;
+    ``("pallas", (("interpret", x),))`` = the fused Pallas kernel registered
+    by repro.kernels.sage_decode)."""
+    if fmt_name not in _FORMAT_FUSERS:
+        raise KeyError(
+            f"format {fmt_name!r} has no registered fuser; "
+            f"use the two-step decode path"
+        )
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.size == 0:
+        R, C = db.caps.segs, db.caps.tokens
+        out = {"tokens": jnp.zeros((0, C), jnp.int8),
+               "n_tokens": jnp.zeros((0,), jnp.int32),
+               "n_reads": jnp.zeros((0,), jnp.int32)}
+        for k in ("read_pos", "read_rev", "read_start", "read_len", "read_corner"):
+            out[k] = jnp.zeros((0, R), jnp.int32)
+        out_key, fn = _FORMAT_FUSERS[fmt_name]
+        if fn is not None:
+            out[out_key] = fn(out, kmer_k)
+        return out
+    kind, opts = path_key if path_key is not None else ("vmap", ())
+    classes_key = tuple(sorted((k, tuple(v)) for k, v in db.classes.items()))
+    run = _FUSED_DECODERS[kind](
+        _HashableCaps(db.caps), classes_key, db.fixed_len, fmt_name,
+        kmer_k, dict(opts),
+    )
+    padded, valid = pad_block_ids(ids)
+    out = dict(run(db.arrays, jnp.asarray(padded, jnp.int32),
+                   jnp.asarray(valid, jnp.int32)))
+    if padded.size == ids.size:
+        return out
+    return {k: v[: ids.size] for k, v in out.items()}
+
+
 class _HashableCaps:
     """Hashable static wrapper around BlockCaps for jit (idempotent: wrapping
     an already-wrapped caps reuses the underlying dataclass)."""

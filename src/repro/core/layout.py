@@ -1778,13 +1778,17 @@ class HostExtentCache:
             "cache_bytes": 0, "cache_peak_bytes": 0,
         }
 
-    def get(self, key) -> Optional[dict]:
+    def get(self, key, record: bool = True) -> Optional[dict]:
+        """``record=False`` is the double-checked re-read under the disk
+        lock: one logical miss must count once, not once per check."""
         hit = self._entries.get(key)
         if hit is None:
-            self.stats["cache_misses"] += 1
+            if record:
+                self.stats["cache_misses"] += 1
             return None
         self._entries.move_to_end(key)
-        self.stats["cache_hits"] += 1
+        if record:
+            self.stats["cache_hits"] += 1
         return hit[0]
 
     def put(self, key, arrays: dict, nbytes: int) -> None:

@@ -41,11 +41,13 @@ from jax.sharding import Mesh
 
 import os
 
-from repro.core.api import apply_format, get_format
+from repro.core.api import apply_format, available_formats, get_format
 from repro.core.bitio import unpack_2bit_batch
 from repro.core.decode_jax import (
     DeviceBlocks,
     decode_blocks_bucketed,
+    fused_decode_blocks_bucketed,
+    fused_format_supported,
     localize_directory,
     prepare_device_blocks,
     unpack_block_rows,
@@ -167,11 +169,27 @@ class SageStore:
         self._io = new_io_stats()
         self._io["group_uploads"] = 0
         self._io["stale_retries"] = 0
+        for k in (
+            "stream_fetches", "stream_io_groups", "stream_slot_releases",
+            "stream_inflight_hwm", "stream_slot_hwm",
+        ):
+            self._io[k] = 0
+        for k in (
+            "stream_io_seconds", "stream_upload_seconds",
+            "stream_dispatch_seconds", "stream_consume_seconds",
+            "stream_wall_seconds",
+        ):
+            self._io[k] = 0.0
         self._extent_cache = HostExtentCache(cache_budget)
         self._cache_stats: dict[str, dict[str, int]] = {}
         self._quarantine: dict[str, set[int]] = {}
         self._scrubber = None  # set by repro.core.scrub.Scrubber.attach
         self._lock = threading.RLock()
+        # serializes CONTAINER DISK ACCESS only: a background I/O stage
+        # ranged-reading group i+2 must not hold the store lock a consumer
+        # needs to decode group i (that serialization is exactly the
+        # overlap the pipelined stream exists to remove)
+        self._disk_lock = threading.Lock()
 
     # ---------------------------------------------------------- registration
     def register(self, name: str, src: Union[SageFile, str, Path]) -> None:
@@ -563,6 +581,18 @@ class SageStore:
         ``transfer_stats``. Snapshot; mutate via ``reset_io_stats``."""
         d = dict(self._io)
         d.update(self._extent_cache.stats)
+        stage = (
+            d.get("stream_io_seconds", 0.0)
+            + d.get("stream_upload_seconds", 0.0)
+            + d.get("stream_dispatch_seconds", 0.0)
+            + d.get("stream_consume_seconds", 0.0)
+        )
+        # overlap proof for the pipelined stream: 1 - wall/sum(stages) is 0
+        # for a fully serial pipeline and approaches 1 - 1/n_stages when
+        # every stage hides behind the slowest one
+        d["stream_overlap_fraction"] = (
+            1.0 - d.get("stream_wall_seconds", 0.0) / stage if stage > 0 else 0.0
+        )
         return d
 
     def reset_io_stats(self) -> None:
@@ -670,68 +700,27 @@ class SageStore:
         Miss path: ranged-read the group's extents (through the host extent
         cache), zero-pad the ragged tail group to the uniform stride, and
         upload once (sharded under the store mesh). The host cache keeps the
-        padded arrays, so a device-evicted group re-uploads without disk."""
+        padded arrays, so a device-evicted group re-uploads without disk.
+
+        Locking: the store lock guards only cache bookkeeping; the actual
+        disk gather runs under ``_disk_lock`` (see ``_host_group_raw``) so
+        a pipelined stream's background I/O stage and a consumer's decode
+        of an already-cached group proceed concurrently."""
         key = (name, gi)
         with self._lock:
-            if gi in self._quarantine.get(name, ()):
-                raise IntegrityError(
-                    f"dataset {name!r} block group {gi} is quarantined after "
-                    f"a confirmed integrity failure; run "
-                    f"store.repair({name!r}, group={gi}) to reconstruct it "
-                    f"from parity (quarantine lifts after re-verify), or "
-                    f"re-register a repaired container",
-                    dataset=name, block_group=gi,
-                )
+            self._check_quarantine(name, gi)
             if key in self._prepared:
                 self._prepared.move_to_end(key)
                 self._bump_cache(name, "hits")
                 return self._prepared[key]
             self._bump_cache(name, "misses")
-            r = self._reader(name)
-            if r is None:
-                # the dataset was re-registered onto an eager source between
-                # the caller's reader check and this lock acquisition; the
-                # old lazy state is gone — a clear error beats serving a mix
-                raise StaleDatasetError(
-                    f"dataset {name!r} was re-registered while a lazy read "
-                    f"was in flight; retry the read",
-                    dataset=name, block_group=gi,
-                )
+            r = self._require_reader(name, gi)
             stride = self._group_stride()
-            if r.codec is not None:
-                return self._prepared_group_codec(name, gi, r, stride)
-            arrays = self._extent_cache.get(key)
-            if arrays is None:
-                lo = gi * self.group_blocks
-                hi = min(lo + self.group_blocks, r.meta.n_blocks)
-                try:
-                    arrays = r.gather_block_arrays(
-                        np.arange(lo, hi, dtype=np.int64)
-                    )
-                except SageIOError as e:
-                    # annotate with store-level context, purge every cached
-                    # form of the group, and (for confirmed corruption)
-                    # quarantine it so re-access fails fast
-                    e.dataset = name
-                    e.block_group = gi
-                    self._quarantine_group(name, gi, e)
-                    raise
-                if hi - lo < stride:
-                    pad = stride - (hi - lo)
-                    arrays = {
-                        k: np.concatenate(
-                            [v, np.zeros((pad,) + v.shape[1:], dtype=v.dtype)]
-                        )
-                        for k, v in arrays.items()
-                    }
-                # the gather returns column VIEWS into one stride-aligned read
-                # buffer; caching those would pin the whole buffer (alignment
-                # pad included) while the budget only counted the payload.
-                # Copy each column so cached bytes == accounted bytes.
-                arrays = {k: np.ascontiguousarray(v) for k, v in arrays.items()}
-                self._extent_cache.put(
-                    key, arrays, int(sum(v.nbytes for v in arrays.values()))
-                )
+        if r.codec is not None:
+            entry = self._host_group_codec(name, gi, r)
+            db, decoded = self._decode_codec_entry(r, stride, entry)
+        else:
+            arrays = self._host_group_raw(name, gi, r, stride)
             db = DeviceBlocks(
                 arrays=arrays,
                 caps=r.meta.caps,
@@ -740,28 +729,113 @@ class SageStore:
                 n_blocks=stride,
                 on_device=False,
             ).to_device(mesh=self.mesh)
+            decoded = 0
+        with self._lock:
+            # re-check under the lock: a concurrent thread may have uploaded
+            # the same group (keep its entry) or quarantined it (discard ours)
+            self._check_quarantine(name, gi)
+            if key in self._prepared:
+                self._prepared.move_to_end(key)
+                return self._prepared[key]
+            self._io["extent_bytes_decoded"] += decoded
             self._io["group_uploads"] += 1
             self._insert_prepared(key, db)
             return db
 
-    def _prepared_group_codec(
-        self, name: str, gi: int, r: SageContainerV2, stride: int
-    ) -> DeviceBlocks:
-        """Codec-container group residency: cache compressed, unpack on device.
+    def _check_quarantine(self, name: str, gi: int) -> None:
+        """Raise the fail-fast quarantine error for a known-bad group
+        (lock held by callers)."""
+        if gi in self._quarantine.get(name, ()):
+            raise IntegrityError(
+                f"dataset {name!r} block group {gi} is quarantined after "
+                f"a confirmed integrity failure; run "
+                f"store.repair({name!r}, group={gi}) to reconstruct it "
+                f"from parity (quarantine lifts after re-verify), or "
+                f"re-register a repaired container",
+                dataset=name, block_group=gi,
+            )
 
-        The host extent cache holds the group's STORED form — the ragged
-        concatenation of verified compressed payload words plus the (raw)
-        consensus windows and localized directory — so the cache budget is
-        spent in compressed bytes, matching the disk footprint rather than
-        the ~10-40x larger decoded rows. On upload the ragged payload is
-        re-padded to the container's uniform ``cap_words`` and undone *on
-        device* by the jitted unpack (``unpack_impl="jnp"``, default) or the
-        Pallas unpack kernel (``"pallas"``; a store mesh always uses the jnp
-        path — the unpack jit shards row-wise under GSPMD). Lock held by
-        ``_prepared_group``, which has already consumed the LRU miss."""
+    def _require_reader(self, name: str, gi: int) -> SageContainerV2:
+        """The v2 reader for a lazy access already in flight (lock held).
+
+        A ``None`` reader here means the dataset was re-registered onto an
+        eager source between the caller's reader check and this lock
+        acquisition; the old lazy state is gone — a clear error beats
+        serving a mix."""
+        r = self._reader(name)
+        if r is None:
+            raise StaleDatasetError(
+                f"dataset {name!r} was re-registered while a lazy read "
+                f"was in flight; retry the read",
+                dataset=name, block_group=gi,
+            )
+        return r
+
+    def _host_group_raw(
+        self, name: str, gi: int, r: SageContainerV2, stride: int
+    ) -> dict:
+        """Block group ``gi``'s decoded-layout host arrays, through the host
+        extent cache; the disk gather itself runs under ``_disk_lock``."""
         key = (name, gi)
-        entry = self._extent_cache.get(key)
-        if entry is None:
+        with self._lock:
+            arrays = self._extent_cache.get(key)
+        if arrays is not None:
+            return arrays
+        with self._disk_lock:
+            with self._lock:
+                arrays = self._extent_cache.get(key, record=False)
+                if arrays is not None:
+                    return arrays
+            lo = gi * self.group_blocks
+            hi = min(lo + self.group_blocks, r.meta.n_blocks)
+            try:
+                arrays = r.gather_block_arrays(
+                    np.arange(lo, hi, dtype=np.int64)
+                )
+            except SageIOError as e:
+                # annotate with store-level context, purge every cached
+                # form of the group, and (for confirmed corruption)
+                # quarantine it so re-access fails fast
+                e.dataset = name
+                e.block_group = gi
+                with self._lock:
+                    self._quarantine_group(name, gi, e)
+                raise
+            if hi - lo < stride:
+                pad = stride - (hi - lo)
+                arrays = {
+                    k: np.concatenate(
+                        [v, np.zeros((pad,) + v.shape[1:], dtype=v.dtype)]
+                    )
+                    for k, v in arrays.items()
+                }
+            # the gather returns column VIEWS into one stride-aligned read
+            # buffer; caching those would pin the whole buffer (alignment
+            # pad included) while the budget only counted the payload.
+            # Copy each column so cached bytes == accounted bytes.
+            arrays = {k: np.ascontiguousarray(v) for k, v in arrays.items()}
+            with self._lock:
+                self._extent_cache.put(
+                    key, arrays, int(sum(v.nbytes for v in arrays.values()))
+                )
+        return arrays
+
+    def _host_group_codec(self, name: str, gi: int, r: SageContainerV2) -> dict:
+        """Codec-container host entry for group ``gi``: the STORED form —
+        ragged verified compressed payload words plus (raw) consensus
+        windows and localized directory — so the cache budget is spent in
+        compressed bytes, matching the disk footprint rather than the
+        ~10-40x larger decoded rows. Disk gathers run under ``_disk_lock``."""
+        key = (name, gi)
+        with self._lock:
+            entry = self._extent_cache.get(key)
+        if entry is not None:
+            return entry
+        with self._disk_lock:
+            with self._lock:
+                entry = self._extent_cache.get(key, record=False)
+                if entry is not None:
+                    return entry
             lo = gi * self.group_blocks
             hi = min(lo + self.group_blocks, r.meta.n_blocks)
             ids = np.arange(lo, hi, dtype=np.int64)
@@ -771,7 +845,8 @@ class SageStore:
             except SageIOError as e:
                 e.dataset = name
                 e.block_group = gi
-                self._quarantine_group(name, gi, e)
+                with self._lock:
+                    self._quarantine_group(name, gi, e)
                 raise
             lens = ((r.extents[ids, 1] + 3) // 4).astype(np.int64)
             keep = np.arange(packed.shape[1])[None, :] < lens[:, None]
@@ -781,9 +856,21 @@ class SageStore:
                 "cons": np.ascontiguousarray(cons),
                 "dir": np.ascontiguousarray(localize_directory(r.directory, ids)),
             }
-            self._extent_cache.put(
-                key, entry, int(sum(v.nbytes for v in entry.values()))
-            )
+            with self._lock:
+                self._extent_cache.put(
+                    key, entry, int(sum(v.nbytes for v in entry.values()))
+                )
+        return entry
+
+    def _decode_codec_entry(
+        self, r: SageContainerV2, stride: int, entry: dict
+    ) -> tuple[DeviceBlocks, int]:
+        """Upload a codec host entry: re-pad the ragged payload to the
+        container's uniform ``cap_words`` and undo the codec *on device* by
+        the jitted unpack (``unpack_impl="jnp"``, default) or the Pallas
+        unpack kernel (``"pallas"``; a store mesh always uses the jnp path —
+        the unpack jit shards row-wise under GSPMD). Returns the device
+        blocks plus the decoded-byte count for the caller to account."""
         lens = entry["lens"]
         n = int(lens.size)
         cap = r._cap_words
@@ -813,7 +900,6 @@ class SageStore:
                 arrays = dict(unpack_block_rows(buf, r._codec_dicts, widths))
             arrays["cons"] = jnp.asarray(cons)
             arrays["dir"] = jnp.asarray(dirr)
-        self._io["extent_bytes_decoded"] += n * r.layout.payload_nbytes
         db = DeviceBlocks(
             arrays=arrays,
             caps=r.meta.caps,
@@ -823,9 +909,47 @@ class SageStore:
             on_device=True,
             mesh=self.mesh,
         )
-        self._io["group_uploads"] += 1
-        self._insert_prepared(key, db)
-        return db
+        return db, n * r.layout.payload_nbytes
+
+    def prefetch_group_host(self, name: str, gi: int) -> bool:
+        """Pull block group ``gi``'s bytes disk → host extent cache, no
+        device work — the pipelined stream's background I/O stage.
+
+        Reads flow through the same CRC/retry/reconstruction path as
+        synchronous access (``SageContainerV2.gather_*`` under
+        ``_disk_lock``), so a corrupt group quarantines *here* and the
+        consumer's later decode of that fetch surfaces the identical typed
+        :class:`SageIOError`. Returns True when host bytes are (now)
+        cached; False when there is nothing to prefetch (eager source, or
+        the group is already device-resident)."""
+        key = (name, gi)
+        with self._lock:
+            self._check_quarantine(name, gi)
+            if key in self._prepared:
+                return False
+            r = self._reader(name)
+            if r is None:
+                return False
+            stride = self._group_stride()
+        if r.codec is not None:
+            self._host_group_codec(name, gi, r)
+        else:
+            self._host_group_raw(name, gi, r, stride)
+        return True
+
+    def release_group(self, name: str, gi: int) -> bool:
+        """Drop one block group's device residency; the host extent cache
+        keeps its bytes, so a re-read is an upload, not a disk seek.
+
+        The pipelined stream's slot-recycling hook: each retired fetch
+        returns its device slots before the next fetch uploads, so
+        steady-state streaming holds a bounded double-buffered set of
+        groups instead of churning the shared LRU (scan resistance: a long
+        stream never evicts other datasets' hot residency). Deliberate
+        recycling, not pressure — per-dataset eviction counters don't
+        move. Returns True when a residency was dropped."""
+        with self._lock:
+            return self._prepared.pop((name, gi), None) is not None
 
     def prepared_for(self, name: str, ids) -> tuple[DeviceBlocks, np.ndarray]:
         """Device residency covering ``ids`` + local row indices into it.
@@ -933,9 +1057,16 @@ class SageStore:
         interpret: bool = True,
         mesh: Optional[Mesh] = None,
         shards: Optional[int] = None,
+        fused: bool = False,
     ) -> "SageReadSession":
         """Open a read session. ``mesh``/``shards`` default to the store's
         mesh (``shards=1`` forces the single-device decode path).
+
+        ``fused=True`` collapses decode + format into one dispatch (a
+        single Pallas gather+unpack+reformat kernel when ``use_pallas``,
+        one fused jit otherwise) — bit-identical output, fewer launches;
+        formats without a registered fuser and mesh sessions transparently
+        fall back to the two-step path.
 
         On a sharded store the only valid overrides are the store's own mesh
         or the single-device path: resident arrays are committed to the
@@ -952,7 +1083,9 @@ class SageStore:
                 "re-shard by building a store with the desired mesh, or pass "
                 "shards=1 for the single-device decode path"
             )
-        return SageReadSession(self, use_pallas=use_pallas, interpret=interpret, mesh=m)
+        return SageReadSession(
+            self, use_pallas=use_pallas, interpret=interpret, mesh=m, fused=fused
+        )
 
 
 class SageReadSession:
@@ -968,11 +1101,13 @@ class SageReadSession:
         use_pallas: bool = False,
         interpret: bool = True,
         mesh: Optional[Mesh] = None,
+        fused: bool = False,
     ) -> None:
         self.store = store
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.mesh = mesh
+        self.fused = fused
 
     # ------------------------------------------------------------ SAGe_Write
     def write(self, name: str, read_set, consensus, **kwargs) -> SageFile:
@@ -1050,12 +1185,43 @@ class SageReadSession:
         gathers the requested lanes out of those resident groups."""
         ids = self.resolve_blocks(name, block_range)
         db, local = self.store.prepared_for(name, ids)
+        out = self._decode_prepared(name, db, local, fmt, kmer_k)
+        out["block_ids"] = ids
+        return out
+
+    def _decode_prepared(
+        self, name: str, db: DeviceBlocks, local, fmt, kmer_k: Optional[int]
+    ) -> dict[str, jax.Array]:
+        """Decode + format already-resident blocks — the dispatch half of
+        ``read`` (the pipelined stream calls it separately from residency
+        so upload and decode time out as distinct stages).
+
+        ``fused`` sessions run gather+decode+format as ONE dispatch when a
+        fuser is registered for ``fmt`` (bit-identical to the two-step
+        path); mesh sessions and unfused formats take the two-step path."""
+        spec = get_format(fmt)
+        if self.fused and self.mesh is None and fused_format_supported(spec.name):
+            if spec.requires_k and kmer_k is None:
+                # the same contract apply_format enforces on the 2-step path
+                raise ValueError(
+                    f"SAGe_Read({name!r}): format {spec.name!r} requires kmer_k "
+                    f"(registered formats: {available_formats()})"
+                )
+            path_key = (
+                ("pallas", (("interpret", self.interpret),))
+                if self.use_pallas else ("vmap", ())
+            )
+            if self.use_pallas:
+                import repro.kernels.sage_decode  # noqa: F401  (registers "pallas")
+            return fused_decode_blocks_bucketed(
+                db, local, fmt_name=spec.name, kmer_k=kmer_k, path_key=path_key,
+            )
         path = (
             dict(mesh=self.mesh, decoder_key=self._decoder_key())
             if self.mesh is not None
             else dict(decoder=self._decoder(db))
         )
-        out = decode_blocks_bucketed(
+        return decode_blocks_bucketed(
             db, local,
             postprocess=lambda dec: apply_format(
                 dec, fmt, kmer_k=kmer_k, use_pallas=self.use_pallas,
@@ -1063,8 +1229,6 @@ class SageReadSession:
             ),
             **path,
         )
-        out["block_ids"] = ids
-        return out
 
     # -------------------------------------------------------------- SAGe_ISP
     def read_stream(
@@ -1080,6 +1244,8 @@ class SageReadSession:
         wrap: bool = False,
         max_fetches: Optional[int] = None,
         dispatch: Optional[int] = None,
+        mode: Optional[str] = None,
+        readahead: int = 2,
     ):
         """SAGe_ISP: stream decoded block groups into an analysis consumer.
 
@@ -1089,13 +1255,24 @@ class SageReadSession:
         returns the :class:`StreamBatch` iterator for pull-based consumers.
 
         ``dispatch=N`` selects thread-free async pipelining instead of the
-        ``prefetch`` worker: up to N decode groups are dispatched ahead
+        ``prefetch`` worker: exactly N decode groups are dispatched ahead
         through JAX's async runtime before the first is yielded, so device
         decode of group #i+k overlaps consumption of group #i with zero
         host synchronization — batches hold device(-sharded) arrays that
         only materialize if the consumer asks. Use it for device-side
         consumers (the token pipeline); keep ``prefetch`` threads for
         consumers that block on host work.
+
+        ``mode="pipelined"`` selects the full disk→host→device→decode
+        pipeline (:class:`repro.core.streaming.PipelinedStream`): a
+        background I/O stage ranged-reads group i+2's extents into the host
+        cache while group i+1 uploads and group i's decode runs — dispatch
+        depth ``dispatch`` (default 2), I/O readahead ``readahead`` fetches
+        beyond that, double-buffered device slots, per-stage wall-time and
+        ``overlap_fraction`` accounting folded into ``store.io_stats``.
+        Other ``mode`` values: ``"sync"``, ``"prefetch"``, ``"dispatch"``
+        name the legacy paths explicitly; ``None`` (default) infers from
+        ``dispatch``/``prefetch`` exactly as before.
 
         ``wrap=True`` cycles block groups forever (epoch increments at each
         wraparound) — bound it with ``max_fetches`` or pull-based iteration.
@@ -1107,16 +1284,44 @@ class SageReadSession:
             raise ValueError(f"blocks_per_fetch must be >= 1, got {blocks_per_fetch}")
         if dispatch is not None and dispatch < 0:
             raise ValueError(f"dispatch depth must be >= 0, got {dispatch}")
+        if mode not in (None, "sync", "prefetch", "dispatch", "pipelined"):
+            raise ValueError(
+                f"mode must be one of 'sync', 'prefetch', 'dispatch', "
+                f"'pipelined' (or None to infer), got {mode!r}"
+            )
+        if readahead < 0:
+            raise ValueError(f"readahead must be >= 0, got {readahead}")
         get_format(fmt)
-        it = self._stream_iter(
-            name, fmt=fmt, kmer_k=kmer_k, start_block=start_block,
-            blocks_per_fetch=blocks_per_fetch, prefetch=prefetch,
-            wrap=wrap, max_fetches=max_fetches, dispatch=dispatch,
-        )
+        if mode == "pipelined":
+            from repro.core.streaming import PipelinedStream
+
+            it = PipelinedStream(
+                self, name, fmt=fmt, kmer_k=kmer_k, start_block=start_block,
+                blocks_per_fetch=blocks_per_fetch, wrap=wrap,
+                max_fetches=max_fetches,
+                dispatch=max(1, dispatch if dispatch is not None else 2),
+                readahead=readahead,
+            )
+        else:
+            if mode == "sync":
+                prefetch, dispatch = 0, None
+            elif mode == "prefetch":
+                prefetch = max(1, prefetch)
+                dispatch = None
+            elif mode == "dispatch" and dispatch is None:
+                dispatch = 2
+            it = self._stream_iter(
+                name, fmt=fmt, kmer_k=kmer_k, start_block=start_block,
+                blocks_per_fetch=blocks_per_fetch, prefetch=prefetch,
+                wrap=wrap, max_fetches=max_fetches, dispatch=dispatch,
+            )
         if consumer is None:
             return it
         if wrap and max_fetches is None:
             raise ValueError("read_stream(consumer=..., wrap=True) needs max_fetches")
+        if mode == "pipelined":
+            with it:
+                return [consumer(batch) for batch in it]
         return [consumer(batch) for batch in it]
 
     def _group_ids(
@@ -1160,12 +1365,15 @@ class SageReadSession:
             # thread-free async pipelining: produce() only *dispatches* the
             # decode (device arrays come back as futures), so running up to
             # `dispatch` groups ahead overlaps device decode with the
-            # consumer without a worker thread or any host sync
+            # consumer without a worker thread or any host sync.
+            # Yield BEFORE dispatching once the window is full, so exactly
+            # `dispatch` groups are ever in flight (dispatch=0 degenerates
+            # to the synchronous path: dispatch, then yield immediately).
             pending: "deque[StreamBatch]" = deque()
             for g in groups:
-                pending.append(produce(*g))
-                if len(pending) > dispatch:
+                if pending and len(pending) >= dispatch:
                     yield pending.popleft()
+                pending.append(produce(*g))
             while pending:
                 yield pending.popleft()
             return

@@ -73,6 +73,7 @@ class SageTokenPipeline:
         blocks_per_fetch: int = 4,
         prefetch: int = 2,
         dispatch: int = 2,
+        stream_mode: str = "pipelined",
         cursor: Optional[Cursor] = None,
         seed: int = 0,
         mesh=None,
@@ -104,9 +105,14 @@ class SageTokenPipeline:
             if store is None:
                 raise ValueError("named dataset source requires a store")
             self.store, self.name = store, source
+        if stream_mode not in ("dispatch", "pipelined"):
+            raise ValueError(
+                f"stream_mode must be 'dispatch' or 'pipelined', got {stream_mode!r}"
+            )
+        self.stream_mode = stream_mode
         self.session: SageReadSession = (
             session if session is not None
-            else self.store.session(use_pallas=use_pallas_decode)
+            else self.store.session(use_pallas=use_pallas_decode, fused=True)
         )
         # header-only metadata access: an out-of-core (v2) source must never
         # be materialized whole just to size the cursor math
@@ -139,6 +145,37 @@ class SageTokenPipeline:
         from a cursor reads only the blocks the stream actually touches,
         never more than the store's ``cache_budget`` host bytes at once."""
         return self.store.io_stats
+
+    @property
+    def stream_stats(self) -> dict:
+        """Per-stage wall time and overlap accounting of the *open* pipelined
+        ISP stream (empty in ``dispatch`` mode / before the first fetch).
+        Closed streams fold the same numbers into ``io_stats['stream_*']``."""
+        from repro.core.streaming import PipelinedStream
+
+        if isinstance(self._stream, PipelinedStream):
+            return self._stream.stats.to_dict()
+        return {}
+
+    def close(self) -> None:
+        """Release the open ISP stream (stops its background I/O thread and
+        folds its stage timings into the store's ``io_stats`` and this
+        pipeline's ``transfer_stats`` under ``stream_*`` keys). Idempotent;
+        the pipeline stays usable — the next fetch reopens at the cursor."""
+        stream, self._stream = self._stream, None
+        if stream is None or not hasattr(stream, "close"):
+            return
+        stream.close()
+        if hasattr(stream, "stats"):
+            ts = self.transfer_stats
+            for k, v in stream.stats.to_dict().items():
+                if k == "overlap_fraction":
+                    continue  # a ratio; per-stream value lives in stream_stats
+                key = f"stream_{k}"
+                if k.endswith("hwm"):
+                    ts[key] = max(ts.get(key, 0), v)
+                else:
+                    ts[key] = ts.get(key, 0) + v
 
     # ------------------------------------------------------------------
     def _gather_index(self, ids: tuple) -> tuple:
@@ -173,6 +210,7 @@ class SageTokenPipeline:
                 prefetch=0,  # batch-level prefetch lives in prefetched()
                 dispatch=self.dispatch,
                 wrap=True,
+                mode=self.stream_mode,
             )
         sb = next(self._stream)
         # the stream is the single source of truth for cyclic-advance state
@@ -269,4 +307,4 @@ class SageTokenPipeline:
         self._parts = []
         self._buffered = 0
         self._skip = within
-        self._stream = None  # re-open the ISP stream at the restored block
+        self.close()  # re-open the ISP stream at the restored block

@@ -23,14 +23,15 @@ from repro.core.api import kmer_special_ids
 from repro.core.decode_jax import PAD_BASE, TRACE_COUNTS
 
 
-def _kmer_kernel(k: int, with_ntok: bool, *refs):
-    if with_ntok:
-        tok_ref, ntok_ref, out_ref = refs
-        n_tok = ntok_ref[0, 0]
-    else:
-        tok_ref, out_ref = refs
-        n_tok = None
-    t = tok_ref[0].astype(jnp.int32)  # (TILE,)
+def kmer_ids_row(t: jax.Array, k: int, n_tok) -> jax.Array:
+    """One block's k-mer ids: (C,) int32 base tokens -> (C//k,) int32 ids.
+
+    Pure jnp row math shared by the standalone kmer kernel and the fused
+    gather+decode+reformat kernel (repro.kernels.sage_decode) — one
+    definition is the bit-identity guarantee between the two.
+    ``n_tok=None`` is the legacy contract (PAD and in-read N
+    indistinguishable); with a scalar ``n_tok`` the kmer_pack contract
+    holds: N-block inside ``n_tok``, pad at/past it."""
     C = t.shape[0]
     g = t[: (C // k) * k].reshape(C // k, k)
     gz = jnp.where(g > 3, 0, g)
@@ -39,13 +40,27 @@ def _kmer_kernel(k: int, with_ntok: bool, *refs):
         ids = ids * 4 + gz[:, i]
     sp = kmer_special_ids(k)
     has4 = jnp.any(g == PAD_BASE, axis=-1)  # PAD_BASE == 4 == N code
-    if n_tok is None:  # legacy: PAD and in-read N are indistinguishable
-        ids = jnp.where(has4, sp["pad"], ids)
-    else:  # the kmer_pack contract: N-block inside n_tok, pad at/past it
-        gi = jnp.arange(C // k, dtype=jnp.int32)
-        in_read = (gi + 1) * k <= n_tok
-        ids = jnp.where(has4, jnp.where(in_read, sp["nblk"], sp["pad"]), ids)
-    out_ref[0] = ids
+    if n_tok is None:
+        return jnp.where(has4, sp["pad"], ids)
+    gi = jnp.arange(C // k, dtype=jnp.int32)
+    in_read = (gi + 1) * k <= n_tok
+    return jnp.where(has4, jnp.where(in_read, sp["nblk"], sp["pad"]), ids)
+
+
+def one_hot_row(t: jax.Array) -> jax.Array:
+    """One block's one-hot plane: (C,) int tokens -> (C, 4) bool (callers
+    cast to their output dtype). Shared with the fused kernel."""
+    return t[:, None] == jnp.arange(4, dtype=jnp.int32)[None, :]
+
+
+def _kmer_kernel(k: int, with_ntok: bool, *refs):
+    if with_ntok:
+        tok_ref, ntok_ref, out_ref = refs
+        n_tok = ntok_ref[0, 0]
+    else:
+        tok_ref, out_ref = refs
+        n_tok = None
+    out_ref[0] = kmer_ids_row(tok_ref[0].astype(jnp.int32), k, n_tok)
 
 
 @functools.lru_cache(maxsize=64)
@@ -87,7 +102,7 @@ def kmer_pack_pallas(
 
 def _onehot_kernel(tok_ref, out_ref):
     t = tok_ref[0].astype(jnp.int32)  # (TILE,)
-    out_ref[0] = (t[:, None] == jnp.arange(4, dtype=jnp.int32)[None, :]).astype(out_ref.dtype)
+    out_ref[0] = one_hot_row(t).astype(out_ref.dtype)
 
 
 @functools.lru_cache(maxsize=64)

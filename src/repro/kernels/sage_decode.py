@@ -40,9 +40,10 @@ from repro.core.decode_jax import (
     DeviceBlocks,
     _HashableCaps,
     decode_block_arrays,
+    register_fused_decoder,
     register_shard_decoder,
 )
-from repro.core.format import STREAMS
+from repro.core.format import D, STREAMS
 
 OUT_KEYS = ("tokens", "read_pos", "read_rev", "read_start", "read_len", "read_corner")
 
@@ -138,6 +139,117 @@ def _build_pallas_shard_decoder(caps, classes, fixed_len, opts):
 
 # sessions select this path with decoder_key=("pallas", (("interpret", x),))
 register_shard_decoder("pallas", _build_pallas_shard_decoder)
+
+
+# --------------------------------------------------------------------------
+# fused gather + decode + reformat: ONE kernel, output in consumer layout
+# --------------------------------------------------------------------------
+# The two-step Pallas path launches the decode kernel, then a second format
+# kernel over its token plane (two HBM round trips for the tokens). The
+# fused kernel body decodes a block AND formats it while the decoded tokens
+# are still in VMEM — the formatted plane is written directly, the token
+# round trip disappears. Row math is shared with the standalone format
+# kernels (repro.kernels.reformat.kmer_ids_row / one_hot_row), so fused
+# output is bit-identical by construction. The on-device block gather runs
+# in the same jit as the kernel call: one dispatch end to end.
+
+
+def _fused_kernel(caps, classes, fixed_len, names, fmt_name, kmer_k, *refs):
+    ins = refs[: len(names)]
+    outs = refs[len(names):]
+    blk = {n: r[0] for n, r in zip(names, ins)}
+    dec = decode_block_arrays(blk, caps=caps, classes=classes, fixed_len=fixed_len)
+    for key, oref in zip(OUT_KEYS, outs):
+        oref[0] = dec[key].astype(oref.dtype)
+    if fmt_name == "kmer":
+        from repro.kernels.reformat import kmer_ids_row
+
+        # n_tokens for THIS lane = dir row count masked by the valid column
+        # (exactly what _fill_counts feeds the standalone format kernel)
+        n_tok = blk["dir"][D["n_tokens"]].astype(jnp.int32) * blk["valid"][0]
+        outs[len(OUT_KEYS)][0] = kmer_ids_row(
+            dec["tokens"].astype(jnp.int32), kmer_k, n_tok
+        )
+    elif fmt_name == "onehot":
+        from repro.kernels.reformat import one_hot_row
+
+        outs[len(OUT_KEYS)][0] = one_hot_row(
+            dec["tokens"].astype(jnp.int32)
+        ).astype(outs[len(OUT_KEYS)].dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_fused_gather_decode(
+    caps_h, classes_key, fixed_len, nb, shapes, names, fmt_name, kmer_k, interpret
+):
+    """One jitted gather + fused pallas_call per (decode signature, format)."""
+    caps = caps_h
+    classes = {k: tuple(v) for k, v in classes_key}
+    R, C = caps.segs, caps.tokens
+    in_specs = [pl.BlockSpec((1, w), lambda i: (i, 0)) for w in shapes]
+    out_shapes = [
+        jax.ShapeDtypeStruct((nb, C), jnp.int8),  # tokens
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_pos
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_rev
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_start
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_len
+        jax.ShapeDtypeStruct((nb, R), jnp.int32),  # read_corner
+    ]
+    out_specs = [pl.BlockSpec((1, s.shape[1]), lambda i: (i, 0)) for s in out_shapes]
+    out_keys = list(OUT_KEYS)
+    if fmt_name == "kmer":
+        out_shapes.append(jax.ShapeDtypeStruct((nb, C // kmer_k), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, C // kmer_k), lambda i: (i, 0)))
+        out_keys.append("kmer")
+    elif fmt_name == "onehot":
+        out_shapes.append(jax.ShapeDtypeStruct((nb, C, 4), jnp.bfloat16))
+        out_specs.append(pl.BlockSpec((1, C, 4), lambda i: (i, 0, 0)))
+        out_keys.append("onehot")
+    call = pl.pallas_call(
+        functools.partial(_fused_kernel, caps, classes, fixed_len, names,
+                          fmt_name, kmer_k),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+
+    @jax.jit
+    def run(arrays, ids, valid):
+        TRACE_COUNTS["fused_pallas"] += 1
+        v = valid.astype(jnp.int32)
+        sub = {k: arrays[k][ids] for k in names if k != "valid"}
+        sub["valid"] = v[:, None]
+        out = dict(zip(out_keys, call(*[sub[n] for n in names])))
+        # same expression _fill_counts uses on the two-step path
+        out["n_reads"] = sub["dir"][:, D["n_reads"]] * v
+        out["n_tokens"] = sub["dir"][:, D["n_tokens"]] * v
+        return out
+
+    return run
+
+
+def _build_pallas_fused(caps_h, classes_key, fixed_len, fmt_name, kmer_k, opts):
+    """Fused-path builder for ``fused_decode_blocks_bucketed`` (the lru'd
+    kernel build keys on the padded shapes, resolved at first call)."""
+    interpret = bool(opts.get("interpret", True))
+
+    def run(arrays, ids, valid):
+        names = list(STREAMS) + ["cons", "dir", "valid"]
+        shapes = tuple(
+            int(arrays[n].shape[1]) for n in names if n != "valid"
+        ) + (1,)
+        fn = _build_fused_gather_decode(
+            caps_h, classes_key, fixed_len, int(ids.shape[0]), shapes,
+            tuple(names), fmt_name, kmer_k, interpret,
+        )
+        return fn(arrays, ids, valid)
+
+    return run
+
+
+register_fused_decoder("pallas", _build_pallas_fused)
 
 
 # --------------------------------------------------------------------------

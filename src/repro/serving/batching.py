@@ -63,6 +63,7 @@ class ContinuousBatcher:
         max_union_blocks: int = 64,
         use_pallas: bool = False,
         interpret: bool = True,
+        prefetch_isp: bool = True,
     ) -> None:
         if max_batch_requests < 1:
             raise ValueError("max_batch_requests must be >= 1")
@@ -76,13 +77,16 @@ class ContinuousBatcher:
         self.max_union_blocks = max_union_blocks
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.prefetch_isp = prefetch_isp
         self.stats = {
             "rounds": 0, "fused_reads": 0, "fused_read_requests": 0,
             "fused_blocks": 0, "consensus_calls": 0, "generate_batches": 0,
             "deferred": 0, "skipped_backpressure": 0, "isolated_failures": 0,
             "repair_attempts": 0, "auto_repairs": 0,
+            "isp_prefetched_groups": 0, "isp_prefetch_errors": 0,
         }
         self._repair_attempted: set[tuple] = set()
+        self._prefetcher = None  # lazy HostPrefetcher; first ISP delivery starts it
 
     # ------------------------------------------------------------------ step
     def session(self):
@@ -103,6 +107,37 @@ class ContinuousBatcher:
         return e.cursor >= self._resolve(e).size or (
             r.max_fetches is not None and e.fetches >= r.max_fetches
         )
+
+    def _prefetch_next_chunk(self, e: _Entry) -> None:
+        """Stage the NEXT chunk's block groups disk -> host cache in the
+        background: the moment a chunk is delivered its successor is known,
+        so the following round's fused ``read`` finds the extents already
+        host-resident (the batcher's analogue of the pipelined stream's I/O
+        stage). Errors never surface here — the store quarantines a corrupt
+        group internally and the request's own next read fails fast with
+        the same typed error it would have hit synchronously."""
+        store = self.pool.store
+        if store._reader(e.request.dataset) is None:
+            return  # eager dataset: nothing on disk to stage
+        if self._prefetcher is None:
+            from repro.core.streaming import HostPrefetcher
+
+            self._prefetcher = HostPrefetcher(store)
+        for b in self._isp_chunk_ids(e):
+            self._prefetcher.enqueue(e.request.dataset, int(b) // store.group_blocks)
+
+    def _sync_prefetch_stats(self) -> None:
+        if self._prefetcher is not None:
+            self.stats["isp_prefetched_groups"] = self._prefetcher.stats["prefetched_groups"]
+            self.stats["isp_prefetch_errors"] = self._prefetcher.stats["prefetch_errors"]
+
+    def close(self) -> None:
+        """Stop the background prefetch worker (idempotent). The batcher
+        itself is stateless between rounds and stays usable."""
+        if self._prefetcher is not None:
+            self._sync_prefetch_stats()
+            self._prefetcher.close()
+            self._prefetcher = None
 
     def _maybe_repair(self, err: SageIOError) -> bool:
         """Targeted self-healing: before failing a fused batch's tenants on
@@ -263,6 +298,8 @@ class ContinuousBatcher:
                         delivered += 1
                     if self._isp_done(e):
                         sched.finish(e)
+                    elif self.prefetch_isp:
+                        self._prefetch_next_chunk(e)
                 else:
                     if sched.deliver(e, chunk):
                         delivered += 1
@@ -302,6 +339,7 @@ class ContinuousBatcher:
         # ---- batched LM generation ---------------------------------------
         if gen_items:
             delivered += self._run_generate(gen_items)
+        self._sync_prefetch_stats()
         return delivered
 
     def _run_generate(self, items: list[_Entry]) -> int:

@@ -305,6 +305,7 @@ class SageServer:
         return self
 
     def stop(self) -> None:
+        self.batcher.close()  # ISP host-prefetch worker, if one was started
         if self._thread is None:
             return
         self._stop.set()
